@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: stable timing on CPU (paper section IV-B
+methodology adapted: jit warm-up = their cudnn.benchmark, block_until_ready =
+their CUDA sync, explicit gc between trials, perf_counter)."""
+
+from __future__ import annotations
+
+import gc
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, trials: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call of a jitted function."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    gc.collect()
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

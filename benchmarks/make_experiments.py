@@ -1,0 +1,72 @@
+"""Inject the roofline tables (baseline + optimized) into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from .roofline import RESULTS, load
+
+BASELINE = os.path.join(os.path.dirname(__file__), "results", "dryrun_baseline")
+EXP = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "EXPERIMENTS.md") if False else os.path.join(
+    os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def load_dir(path, mesh="single"):
+    out = []
+    for name in sorted(os.listdir(path)):
+        if name.endswith(f"__{mesh}.json"):
+            with open(os.path.join(path, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def table(records, title):
+    rows = [f"**{title}**", "",
+            "| arch | shape | compute s | memory s | collective s | bottleneck "
+            "| mem/dev GiB | useful |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in records:
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skip (pure full-attn) | — | — |")
+            continue
+        if rec.get("error"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | | | |")
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compute_s']:.4f} | "
+            f"{rec['memory_s']:.4f} | {rec['collective_s']:.4f} | "
+            f"{rec['bottleneck']} | {rec['per_device_mem_gb']:.2f} | "
+            f"{rec['useful_fraction']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    base = load_dir(BASELINE)
+    opt = load_dir(RESULTS)
+    block = (table(base, "Baseline (paper-faithful + straightforward sharding; "
+                         "frozen pre-hillclimb)") + "\n\n" +
+             table(opt, "Optimized (global code fixes; per-cell flags listed "
+                        "in section 4.4)"))
+    with open(EXP) as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, marker + "\n\n" + block, 1)
+    else:  # refresh: replace between marker and the next section header
+        text = re.sub(r"(<!-- ROOFLINE_TABLE -->).*?(\n\nReading of the table)",
+                      r"\1\n\n" + block.replace("\\", "\\\\") + r"\2",
+                      text, flags=re.S)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"wrote {len(base)} baseline + {len(opt)} optimized rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper section III-B memory claim: n-TangentProp is O(n M) while nested
+autodiff's graph is O(M^n).  Measured here as compiled temp-buffer bytes from
+XLA's memory analysis (no wall clock needed)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, init_mlp, ntp_derivatives
+
+from .common import csv_row
+
+
+def _temp_bytes(fn, *args) -> int:
+    mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+    return int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+
+
+def run(max_order: int = 6, batch: int = 256):
+    key = jax.random.PRNGKey(0)
+    params = init_mlp(key, 1, 24, 3, 1, dtype=jnp.float32)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (batch, 1), jnp.float32, -1, 1)
+    rows = []
+    for n in (1, 2, 4, max_order):
+        m_ntp = _temp_bytes(lambda p, x, n=n: ntp_derivatives(p, x, n), params, x)
+        m_ad = _temp_bytes(lambda p, x, n=n: baselines.nested_jacfwd(p, x, n),
+                           params, x)
+        rows.append(csv_row(f"membytes_ntp_n{n}", m_ntp / 1e6,
+                            f"bytes={m_ntp}"))
+        rows.append(csv_row(f"membytes_autodiff_n{n}", m_ad / 1e6,
+                            f"bytes={m_ad};ratio={m_ad / max(m_ntp, 1):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

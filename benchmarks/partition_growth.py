@@ -1,0 +1,26 @@
+"""Paper section III-B bound: p(n) = O(e^sqrt(n)/n) and the total contraction
+work sum_k p(k) stays quasilinear -- the constant behind O(e^sqrt(n) M)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import partition_count, total_fdb_terms
+
+from .common import csv_row
+
+
+def run(max_order: int = 16):
+    rows = []
+    for n in range(1, max_order + 1):
+        pn = partition_count(n)
+        bound = math.exp(math.pi * math.sqrt(2 * n / 3)) / (4 * n * math.sqrt(3))
+        rows.append(csv_row(f"partition_n{n}", 0.0,
+                            f"p={pn};hardy_ramanujan={bound:.1f};"
+                            f"cum_terms={total_fdb_terms(n)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

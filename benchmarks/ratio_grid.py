@@ -1,0 +1,43 @@
+"""Paper Fig. 4-5: autodiff/n-TangentProp runtime ratio across width, depth,
+batch size, and derivative order (ratio > 1 means n-TangentProp is faster)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, init_mlp, ntp_derivatives
+
+from .common import csv_row, time_fn
+
+WIDTHS = (24, 64)
+DEPTHS = (3, 5)
+BATCHES = (64, 256)
+ORDERS = (2, 4, 6)
+
+
+def run(trials: int = 3):
+    rows = []
+    for w in WIDTHS:
+        for d in DEPTHS:
+            key = jax.random.PRNGKey(w * d)
+            params = init_mlp(key, 1, w, d, 1, dtype=jnp.float32)
+            for b in BATCHES:
+                x = jax.random.uniform(jax.random.PRNGKey(b), (b, 1),
+                                       jnp.float32, -1, 1)
+                for n in ORDERS:
+                    t_ntp = time_fn(jax.jit(
+                        lambda p, x, n=n: ntp_derivatives(p, x, n)),
+                        params, x, trials=trials)
+                    t_ad = time_fn(jax.jit(
+                        lambda p, x, n=n: baselines.nested_jacfwd(p, x, n)),
+                        params, x, trials=trials)
+                    rows.append(csv_row(
+                        f"ratio_w{w}_d{d}_b{b}_n{n}", t_ntp,
+                        f"ratio={t_ad / t_ntp:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

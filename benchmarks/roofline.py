@@ -1,0 +1,74 @@
+"""Aggregate the dry-run JSONs into the section-Roofline table.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits (a) CSV rows for benchmarks/run.py and (b) the markdown table used in
+EXPERIMENTS.md section Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+MOVE_HINTS = {
+    "compute": "raise MXU utilization: bigger per-chip tiles (less TP for "
+               "small models), drop masked-causal waste, fuse jets into GEMMs",
+    "memory": "cut HBM traffic: larger fusion regions, fewer remat passes, "
+              "bf16 intermediates, flash-style recompute already applied",
+    "collective": "cut bytes on ICI: less TP for small models, overlap "
+                  "collectives with compute, int8 gradient compression",
+}
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    out = []
+    if not os.path.isdir(RESULTS):
+        return out
+    for name in sorted(os.listdir(RESULTS)):
+        if not name.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(RESULTS, name)) as f:
+            out.append(json.load(f))
+    return out
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | c (s) | m (s) | x (s) | bottleneck | mem/dev GiB | "
+        "HLO TF | model TF | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped ({rec['skipped'][:30]}…) | — | — | — | — |")
+            continue
+        if rec.get("error"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — | — | — |")
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compute_s']:.4f} | "
+            f"{rec['memory_s']:.4f} | {rec['collective_s']:.4f} | "
+            f"{rec['bottleneck']} | {rec['per_device_mem_gb']:.2f} | "
+            f"{rec['hlo_gflops'] / 1e3:.2f} | {rec['model_gflops'] / 1e3:.2f} | "
+            f"{rec['useful_fraction']:.2f} |")
+    return "\n".join(rows)
+
+
+def run():
+    out = []
+    for rec in load("single"):
+        if rec.get("skipped") or rec.get("error"):
+            continue
+        dom = rec["bottleneck"]
+        out.append(f"roofline_{rec['arch']}_{rec['shape']},"
+                   f"{max(rec['compute_s'], rec['memory_s'], rec['collective_s']) * 1e6:.0f},"
+                   f"bottleneck={dom}")
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))

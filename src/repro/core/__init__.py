@@ -1,0 +1,17 @@
+"""Core n-TangentProp: jets, Faa di Bruno tables, activation derivative stacks."""
+
+from . import jet
+from .activations import TAYLOR_STACKS, tanh_taylor_stack
+from .jet import Jet
+from .ntp import (MLPParams, init_mlp, mlp_apply, ntp_derivatives, ntp_forward,
+                  ntp_grid, num_params)
+from .partitions import (bell_number, faa_di_bruno_table, partition_count,
+                         partitions, raw_bell_coefficient, total_fdb_terms)
+
+__all__ = [
+    "jet", "Jet", "TAYLOR_STACKS", "tanh_taylor_stack",
+    "MLPParams", "init_mlp", "mlp_apply", "ntp_derivatives", "ntp_forward",
+    "ntp_grid", "num_params",
+    "bell_number", "faa_di_bruno_table", "partition_count", "partitions",
+    "raw_bell_coefficient", "total_fdb_terms",
+]

@@ -1,0 +1,101 @@
+"""Baselines the paper compares against, plus independent oracles.
+
+* ``nested_autodiff``      -- the standard PINN practice the paper benchmarks:
+                              n nested reverse-mode sweeps (O(M^n) graph).
+* ``nested_jacfwd``        -- forward-over-forward nesting; same asymptotic
+                              blow-up, often faster constants.  Included so the
+                              benchmark shows the *best* autodiff baseline.
+* ``jax_jet_derivatives``  -- jax.experimental.jet (JAX's Taylor mode): an
+                              independent quasilinear implementation used as a
+                              correctness oracle for ours.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .ntp import MLPParams, mlp_apply
+
+
+def _scalar_fn(params: MLPParams, activation: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """x (d_in,) -> scalar along the first output coordinate sum (as the paper's
+    PINN nets have d_out == 1, this is just u(x))."""
+
+    def f(x):
+        return mlp_apply(params, x[None, :], activation)[0].sum()
+
+    return f
+
+
+def nested_autodiff(params: MLPParams, x: jnp.ndarray, order: int,
+                    tangent: jnp.ndarray | None = None,
+                    activation: str = "tanh") -> jnp.ndarray:
+    """(order+1, batch, 1) directional derivatives via n nested jax.grad."""
+    if tangent is None:
+        tangent = jnp.ones_like(x)
+
+    def along(xi, vi):
+        f = _scalar_fn(params, activation)
+
+        def g(t):
+            return f(xi + t * vi)
+
+        outs = []
+        h = g
+        for _ in range(order + 1):
+            outs.append(h)
+            h = jax.grad(h)
+        return jnp.stack([o(0.0) for o in outs])
+
+    return jax.vmap(along)(x, tangent).T[..., None]
+
+
+def nested_jacfwd(params: MLPParams, x: jnp.ndarray, order: int,
+                  tangent: jnp.ndarray | None = None,
+                  activation: str = "tanh") -> jnp.ndarray:
+    """Same quantity via nested forward-mode (jvp towers)."""
+    if tangent is None:
+        tangent = jnp.ones_like(x)
+
+    def along(xi, vi):
+        f = _scalar_fn(params, activation)
+
+        def g(t):
+            return f(xi + t * vi)
+
+        outs = []
+        h = g
+        for _ in range(order + 1):
+            outs.append(h)
+            prev = h
+
+            def deriv(t, prev=prev):
+                return jax.jvp(prev, (t,), (jnp.ones_like(t),))[1]
+
+            h = deriv
+        return jnp.stack([o(jnp.asarray(0.0, x.dtype)) for o in outs])
+
+    return jax.vmap(along)(x, tangent).T[..., None]
+
+
+def jax_jet_derivatives(params: MLPParams, x: jnp.ndarray, order: int,
+                        tangent: jnp.ndarray | None = None,
+                        activation: str = "tanh") -> jnp.ndarray:
+    """(order+1, batch, d_out) raw derivatives via jax.experimental.jet."""
+    from jax.experimental import jet as jjet
+
+    if tangent is None:
+        tangent = jnp.ones_like(x)
+    if order == 0:
+        return mlp_apply(params, x, activation)[None]
+
+    def f(xx):
+        return mlp_apply(params, xx, activation, unroll=True)
+
+    # series seeds raw derivatives of the input curve x + t v: (v, 0, ..., 0)
+    series = [tangent] + [jnp.zeros_like(x) for _ in range(order - 1)]
+    y0, yseries = jjet.jet(f, (x,), ((series),))
+    return jnp.stack([y0] + list(yseries))

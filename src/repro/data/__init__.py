@@ -1,0 +1,3 @@
+"""Data pipelines: PINN collocation sampling + deterministic synthetic tokens."""
+
+from . import collocation, tokens

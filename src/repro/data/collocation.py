@@ -1,0 +1,28 @@
+"""Collocation-point samplers for PINN training."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_grid(lo: float, hi: float, n: int, dtype=jnp.float64) -> jnp.ndarray:
+    return jnp.linspace(lo, hi, n, dtype=dtype)[:, None]
+
+
+def random_points(key: jax.Array, lo: float, hi: float, n: int,
+                  dtype=jnp.float64) -> jnp.ndarray:
+    return jax.random.uniform(key, (n, 1), dtype, lo, hi)
+
+
+def origin_cluster(key: jax.Array, radius: float, n: int,
+                   dtype=jnp.float64) -> jnp.ndarray:
+    """Points concentrated near x=0 where the high-order smoothness loss acts."""
+    return jax.random.uniform(key, (n, 1), dtype, -radius, radius)
+
+
+def resample(key: jax.Array, lo: float, hi: float, n_domain: int,
+             n_origin: int, origin_radius: float, dtype=jnp.float64):
+    k1, k2 = jax.random.split(key)
+    return (random_points(k1, lo, hi, n_domain, dtype),
+            origin_cluster(k2, origin_radius, n_origin, dtype))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the n-TangentProp hot path.
+
+The paper's compute hot-spot is the per-layer jet propagation (stacked GEMM +
+Faa di Bruno activation contraction); ``jet_dense`` fuses both into one VMEM
+round-trip, ``act_jet`` is the standalone pointwise epilogue.  ``ref.py``
+holds the pure-jnp oracles the test sweeps compare against.
+"""
+
+from . import ops, ref
+from .ops import act_jet, jet_dense

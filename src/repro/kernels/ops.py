@@ -1,0 +1,86 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a real TPU these run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body op-by-op and is what
+the allclose test sweeps exercise.  The wrappers also pick TPU-aligned block
+shapes and fall back to the pure-jnp reference for tiny shapes where a kernel
+launch would be pure overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .jet_dense import jet_dense_pallas
+from .tanh_jet import act_jet_pallas
+
+_KERNEL_ACTS = ("tanh", "sigmoid")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# custom VJPs: forward runs the fused Pallas kernel; backward *recomputes*
+# through the pure-jnp reference.  This is deliberate, not a workaround:
+#  - residuals are just the layer inputs -> activation memory stays O(n M),
+#    the paper's linear-memory claim, instead of stashing the (n+1)-stack
+#    of every intermediate partition product;
+#  - the recompute is one extra fused-layer-equivalent of FLOPs, the same
+#    trade remat makes for ordinary transformer layers on TPU.
+# ---------------------------------------------------------------------------
+
+def _act_jet_impl(coeffs: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation not in _KERNEL_ACTS:
+        return ref.act_jet_ref(coeffs, activation)
+    return act_jet_pallas(coeffs, activation, interpret=not _on_tpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def act_jet(coeffs: jnp.ndarray, activation: str = "tanh") -> jnp.ndarray:
+    """Activation jet (n+1, B, W) -> (n+1, B, W)."""
+    return _act_jet_impl(coeffs, activation)
+
+
+def _act_jet_fwd(coeffs, activation):
+    return _act_jet_impl(coeffs, activation), coeffs
+
+
+def _act_jet_bwd(activation, coeffs, g):
+    _, vjp = jax.vjp(lambda c: ref.act_jet_ref(c, activation), coeffs)
+    return vjp(g)
+
+
+act_jet.defvjp(_act_jet_fwd, _act_jet_bwd)
+
+
+def _jet_dense_impl(coeffs, w, b, activation):
+    if activation is not None and activation not in _KERNEL_ACTS:
+        return ref.jet_dense_ref(coeffs, w, b, activation)
+    return jet_dense_pallas(coeffs, w, b, activation, interpret=not _on_tpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def jet_dense(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              activation: str | None = "tanh") -> jnp.ndarray:
+    """Fused dense layer + activation jet: (n+1, B, Din) -> (n+1, B, Dout)."""
+    return _jet_dense_impl(coeffs, w, b, activation)
+
+
+def _jet_dense_fwd(coeffs, w, b, activation):
+    return _jet_dense_impl(coeffs, w, b, activation), (coeffs, w, b)
+
+
+def _jet_dense_bwd(activation, res, g):
+    coeffs, w, b = res
+    _, vjp = jax.vjp(lambda c, ww, bb: ref.jet_dense_ref(c, ww, bb, activation),
+                     coeffs, w, b)
+    return vjp(g)
+
+
+jet_dense.defvjp(_jet_dense_fwd, _jet_dense_bwd)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are *independent* straight-line implementations (no Pallas, no
+core.jet reuse beyond the static tables) so kernel bugs cannot hide behind a
+shared code path.  Tests sweep shapes/dtypes and assert allclose against
+these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .bell_tables import fdb_terms, sigmoid_poly_rows, tanh_poly_rows
+
+_POLY_ROWS = {"tanh": tanh_poly_rows, "sigmoid": sigmoid_poly_rows}
+_PRIMAL = {"tanh": jnp.tanh, "sigmoid": lambda a: 0.5 * (jnp.tanh(0.5 * a) + 1.0)}
+
+
+def _taylor_stack(a: jnp.ndarray, n: int, activation: str) -> list[jnp.ndarray]:
+    """[sigma^(m)(a)/m! for m in 0..n] via Horner on the closed-form polys."""
+    u = _PRIMAL[activation](a)
+    rows = _POLY_ROWS[activation](n)
+    out = []
+    for m in range(n + 1):
+        row = rows[m]
+        acc = jnp.full_like(u, row[-1])
+        for c in row[-2::-1]:
+            acc = acc * u + c
+        out.append(acc)
+    return out
+
+
+def act_jet_ref(coeffs: jnp.ndarray, activation: str = "tanh") -> jnp.ndarray:
+    """Faa di Bruno activation jet.  coeffs: (n+1, ...) scaled Taylor coeffs of
+    the pre-activation; returns the same-shaped stack for sigma(pre-act)."""
+    n = coeffs.shape[0] - 1
+    f = _taylor_stack(coeffs[0], n, activation)
+    rows = [f[0]]
+    for k, terms in enumerate(fdb_terms(n), start=1):
+        acc = jnp.zeros_like(coeffs[0])
+        for coef, m, powers in terms:
+            prod = f[m] * coef
+            for j, e in powers:
+                for _ in range(e):
+                    prod = prod * coeffs[j]
+            acc = acc + prod
+        rows.append(acc)
+    return jnp.stack(rows)
+
+
+def jet_dense_ref(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  activation: str | None = "tanh") -> jnp.ndarray:
+    """Fused layer oracle: (n+1, B, Din) @ (Din, Dout) + bias-on-c0, then
+    the activation jet (or identity for the output layer)."""
+    z = jnp.einsum("nbi,io->nbo", coeffs, w)
+    z = z.at[0].add(b)
+    if activation is None:
+        return z
+    return act_jet_ref(z, activation)

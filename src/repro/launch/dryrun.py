@@ -1,0 +1,231 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input shape x mesh) cell this lowers and compiles
+the real step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct inputs on a 256-chip single-pod mesh and a 512-chip 2-pod
+mesh, prints ``memory_analysis()`` (proves it fits) and ``cost_analysis()``
+(feeds section Roofline), and parses collective bytes out of the optimized
+HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir benchmarks/results
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count at first init, so this must precede every other import.
+import os  # noqa: E402
+
+if "--real-devices" not in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512").strip()
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ASSIGNED, SHAPES, get_arch, shape_applicable  # noqa: E402
+from repro.launch import hlo_static  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.hlo_analysis import Roofline, model_flops  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import Knobs  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             knobs: Knobs = Knobs(), save_hlo: str | None = None,
+             fsdp: bool | None = None, verbose: bool = True,
+             policy: str = "tp", attn_repl: bool = False,
+             accum: int | None = None, hlo_dir: str | None = None) -> dict:
+    cfg = get_arch(arch)
+    if attn_repl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_sharding="replicate")
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": "pure full-attention arch; see DESIGN.md section 4"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    extra = {}
+    if shape.kind == "train":
+        if fsdp is not None:
+            extra["fsdp"] = fsdp
+        if accum is not None:
+            extra["accum"] = accum
+        extra["policy"] = policy
+    built = shd.build_step(cfg, mesh, shape, knobs=knobs, **extra)
+    with mesh:
+        lowered = built.fn.lower(*built.arg_specs)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # static analysis with while-trip-count multiplication (cost_analysis
+    # counts loop bodies once -- see launch/hlo_static.py)
+    totals = hlo_static.analyze(hlo)
+
+    def _mem(attr):
+        return getattr(mem, attr, 0) or 0
+
+    per_dev_bytes = (_mem("argument_size_in_bytes") + _mem("temp_size_in_bytes")
+                     + _mem("output_size_in_bytes"))
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_kind, n_chips=n_chips,
+        hlo_gflops=totals.flops / 1e9,
+        hlo_gbytes=totals.bytes / 1e9,
+        collective_gbytes=totals.total_collective_bytes / 1e9,
+        per_device_mem_gb=per_dev_bytes / 2 ** 30,
+        model_gflops=model_flops(cfg, shape, n_chips) / 1e9,
+        collectives={**{k: round(v / 1e9, 4) for k, v in
+                        totals.collective_bytes.items()},
+                     "counts": {k: v for k, v in
+                                totals.collective_counts.items()}},
+    ).finalize()
+
+    rec = rl.asdict()
+    rec.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               argument_gb=_mem("argument_size_in_bytes") / 2 ** 30,
+               temp_gb=_mem("temp_size_in_bytes") / 2 ** 30,
+               output_gb=_mem("output_size_in_bytes") / 2 ** 30,
+               raw_cost_gflops=float(cost.get("flops", 0)) / 1e9,
+               raw_cost_gbytes=float(cost.get("bytes accessed", 0)) / 1e9)
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}] "
+              f"compile {t_compile:.0f}s | mem/dev {rl.per_device_mem_gb:.2f} GiB | "
+              f"flops {rl.hlo_gflops:.1f}G | bytes {rl.hlo_gbytes:.1f}G | "
+              f"coll {rl.collective_gbytes:.3f}G | "
+              f"terms c/m/x = {rl.compute_s:.4f}/{rl.memory_s:.4f}/"
+              f"{rl.collective_s:.4f}s -> {rl.bottleneck}")
+        print(f"  memory_analysis: args={rec['argument_gb']:.2f} "
+              f"temp={rec['temp_gb']:.2f} out={rec['output_gb']:.2f} GiB/device")
+        print(f"  cost_analysis: flops={rl.hlo_gflops:.2f}G "
+              f"bytes={rl.hlo_gbytes:.2f}G useful={rl.useful_fraction:.2f}")
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"), "wt") as f:
+            f.write(hlo)
+    return rec
+
+
+def reanalyze(args) -> int:
+    """Recompute roofline JSONs from persisted HLO (analysis-model changes
+    don't need a 40-minute recompile sweep)."""
+    import gzip
+
+    for name in sorted(os.listdir(args.hlo_dir)):
+        if not name.endswith(".hlo.gz"):
+            continue
+        arch, shape_name, mesh_kind = name[:-7].split("__")[:3]
+        with gzip.open(os.path.join(args.hlo_dir, name), "rt") as f:
+            hlo = f.read()
+        totals = hlo_static.analyze(hlo)
+        out_path = os.path.join(args.out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        rec = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                rec = json.load(f)
+        cfg = get_arch(arch)
+        shape = SHAPES[shape_name]
+        n_chips = 512 if mesh_kind == "multi" else 256
+        rl = Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_kind, n_chips=n_chips,
+            hlo_gflops=totals.flops / 1e9,
+            hlo_gbytes=totals.bytes / 1e9,
+            collective_gbytes=totals.total_collective_bytes / 1e9,
+            per_device_mem_gb=rec.get("per_device_mem_gb", 0.0),
+            model_gflops=model_flops(cfg, shape, n_chips) / 1e9,
+            collectives={**{k: round(v / 1e9, 4) for k, v in
+                            totals.collective_bytes.items()},
+                         "counts": dict(totals.collective_counts)},
+        ).finalize()
+        rec.update(rl.asdict())
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"reanalyzed {arch} x {shape_name} x {mesh_kind}: "
+              f"m={rl.memory_s:.3f}s x={rl.collective_s:.3f}s -> {rl.bottleneck}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--gla-chunk", type=int, default=64)
+    ap.add_argument("--rwkv-chunk", type=int, default=32)
+    ap.add_argument("--gla-pair-bf16", action="store_true")
+    ap.add_argument("--policy", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--attn-repl", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (perf iterations)")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="persist gzipped optimized HLO per cell")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute JSONs from saved HLO (no compile)")
+    ap.add_argument("--real-devices", action="store_true",
+                    help="skip the 512-device XLA flag (debug)")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        return reanalyze(args)
+
+    knobs = Knobs(q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
+                  gla_chunk=args.gla_chunk, rwkv_chunk=args.rwkv_chunk,
+                  gla_pair_bf16=args.gla_pair_bf16)
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    cells = []
+    archs = ASSIGNED if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for a, s, m in cells:
+        suffix = f"__{args.tag}" if args.tag else ""
+        out_path = os.path.join(args.out_dir, f"{a}__{s}__{m}{suffix}.json")
+        try:
+            rec = run_cell(a, s, m, knobs=knobs, save_hlo=args.save_hlo,
+                           fsdp=fsdp, policy=args.policy,
+                           attn_repl=args.attn_repl, accum=args.accum,
+                           hlo_dir=args.hlo_dir)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": m, "error": repr(e)}
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

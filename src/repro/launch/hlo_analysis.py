@@ -1,0 +1,127 @@
+"""HLO-level analysis of compiled dry-run artifacts: collective-byte parsing
+and the three-term roofline (EXPERIMENTS.md section Roofline).
+
+cost_analysis() provides FLOPs/bytes; collective traffic is parsed from the
+optimized HLO text -- every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand is sized from its shape string.
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment-fixed).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128,256]{2,1,0}  or bf16[8]  or f32[] ; tuple types handled by
+# scanning every element type in the operand list
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) +
+    r")(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of *result* shape bytes per collective kind.
+
+    For all-reduce result==operand; for all-gather the result is the gathered
+    (larger) buffer; for reduce-scatter the operand is larger -- using result
+    shapes consistently under-counts RS by the world factor and over-counts
+    nothing, keeping the estimate conservative-but-stable across kinds."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        result_type, kind = m.group(1), m.group(2)
+        if "-done" in m.group(0):
+            continue  # started elsewhere; avoid double count of async pairs
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(result_type))
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_gflops: float            # total FLOPs of the SPMD program (per chip)
+    hlo_gbytes: float            # HBM traffic estimate (per chip)
+    collective_gbytes: float     # summed collective result bytes (per chip)
+    per_device_mem_gb: float     # compiled argument+temp allocation
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_gflops: float = 0.0    # 6*N*D (train) / 2*N*D (inference), active
+    useful_fraction: float = 0.0
+    collectives: Dict[str, int] = field(default_factory=dict)
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_gflops * 1e9 / PEAK_FLOPS
+        self.memory_s = self.hlo_gbytes * 1e9 / HBM_BW
+        self.collective_s = self.collective_gbytes * 1e9 / LINK_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.hlo_gflops > 0:
+            self.useful_fraction = self.model_gflops / self.hlo_gflops
+        return self
+
+    def asdict(self):
+        return asdict(self)
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful-model FLOPs per chip: 6*N_active*D for train, 2*N_active*D for
+    inference steps (D = tokens processed per step)."""
+    n_active = _active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens / n_chips
+
+
+def _active_params(cfg) -> float:
+    """Parameter count engaged per token (MoE: top_k of n_experts)."""
+    from repro.launch.sharding import arch_param_count
+    total = arch_param_count(cfg)
+    if cfg.moe is None:
+        return total
+    # split expert weights from the rest analytically
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    n_moe_layers = sum(1 for j in range(cfg.n_layers)
+                       if j % cfg.moe.period == cfg.moe.period - 1)
+    expert_params = n_moe_layers * e * (cfg.d_model * 2 * cfg.d_ff +
+                                        cfg.d_ff * cfg.d_model)
+    return (total - expert_params) + expert_params * (k / e)

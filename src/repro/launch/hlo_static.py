@@ -1,0 +1,302 @@
+"""Static analysis of post-optimization HLO text with loop-trip-count
+multiplication.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE -- for
+scan-over-layers programs that undercounts FLOPs/bytes/collectives by the
+layer count, which would wreck the roofline.  This module parses the
+optimized module into per-computation symbol tables (instruction name ->
+result shape), computes
+
+  * dot FLOPs: 2 x |result| x prod(lhs contracting dims),
+  * HBM bytes: operands + results of materializing ops (fusion boundaries,
+    dots, copies, slices, collectives -- the post-fusion buffer model),
+  * collective result bytes per kind,
+
+and walks the call graph from ENTRY multiplying ``while`` bodies by their
+trip count (recovered from the loop condition's comparison constant -- exact
+for lax.scan/fori_loop lowerings).  ``conditional`` takes the max branch.
+
+This is the profile source for the perf loop: no wall clock exists on this
+CPU-only container, so the lowered IR *is* the profile.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*->.*\{\s*$")
+_OPCODE_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return elems_total, bytes_total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+def _split_operands(text: str) -> Tuple[List[str], str]:
+    """Given text starting at '(' of the op, return (operand names, attrs)."""
+    depth = 0
+    end = 0
+    for i, ch in enumerate(text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = text[1:end]
+    attrs = text[end + 1:]
+    names = []
+    d = 0
+    tok = []
+    for ch in inner + ",":
+        if ch in "({[":
+            d += 1
+        elif ch in ")}]":
+            d -= 1
+        if ch == "," and d == 0:
+            t = "".join(tok).strip()
+            if t:
+                names.append(t.split()[-1])  # last word (may carry a type prefix)
+            tok = []
+        else:
+            tok.append(ch)
+    return names, attrs
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None or "= " not in line or not line.startswith("  "):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.rstrip().endswith("{"):
+                nm = hdr.group(1).lstrip("%")
+                cur = Computation(nm)
+                comps[nm] = cur
+                if line.startswith("ENTRY"):
+                    entry = nm
+                continue
+            if cur is not None and line.strip() == "}":
+                cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m is None or cur is None:
+            continue
+        name, rhs = m.group(1).lstrip("%"), m.group(2)
+        om = _OPCODE_RE.search(rhs)
+        if om is None:
+            continue
+        opcode = om.group(1)
+        idx = rhs.find(opcode + "(")
+        result_type = rhs[:idx].strip()
+        operands, attrs = _split_operands(rhs[idx + len(opcode):])
+        operands = [o.lstrip("%") for o in operands]
+        ins = Instr(name, opcode, result_type, operands, attrs)
+        cur.instrs.append(ins)
+        cur.types[name] = result_type
+    return comps, entry
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_CONST_RE = re.compile(r"constant\((\d+)\)")
+_NAMED_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "cond": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+
+# ops whose operands+result count as HBM traffic.  Post-fusion buffer model
+# biased toward the TPU target: standalone convert/broadcast/reshape/
+# transpose/slice/pad/iota in XLA:CPU output would be fused into consumers by
+# XLA:TPU, so they are excluded; what remains is fusion boundaries, matmuls,
+# explicit copies/dynamic addressing, reductions and collectives.
+_MATERIALIZING = set(("fusion", "dot", "copy", "dynamic-slice",
+                      "dynamic-update-slice", "convolution", "gather",
+                      "scatter", "sort", "reduce", "reduce-window",
+                      "select-and-scatter", "rng-bit-generator",
+                      "custom-call") + COLLECTIVE_KINDS)
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add_collective(self, kind: str, nbytes: float, mult: float):
+        self.collective_bytes[kind] = self.collective_bytes.get(kind, 0.0) + nbytes * mult
+        self.collective_counts[kind] = self.collective_counts.get(kind, 0.0) + mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def dot_flops(ins: Instr, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.result_type)
+    contract = 1
+    cm = _CONTRACT_RE.search(ins.attrs)
+    if cm and ins.operands:
+        lhs_type = comp.types.get(ins.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        if cm.group(1):
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    contract *= lhs_dims[ci]
+    return 2.0 * res_elems * contract
+
+
+def while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Largest integer constant in the loop condition: exact for the
+    ``lt(i, N)`` conditions lax.scan/fori_loop lower to."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and ins.operands:
+            try:
+                best = max(best, int(ins.operands[0]))
+            except ValueError:
+                pass
+        for c in _TRIP_CONST_RE.findall(ins.result_type + " " + ins.attrs):
+            best = max(best, int(c))
+    return best
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    for o in ins.operands:
+        t = comp.types.get(o)
+        if t:
+            total += _shape_elems_bytes(t)[1]
+    return total
+
+
+def analyze(hlo: str) -> Totals:
+    comps, entry = parse_computations(hlo)
+    totals = Totals()
+    if entry is None:
+        return totals
+
+    comp_dot_cache: Dict[str, float] = {}
+
+    def comp_dots(name: str) -> float:
+        if name not in comp_dot_cache:
+            c = comps[name]
+            comp_dot_cache[name] = sum(dot_flops(i, c) for i in c.instrs
+                                       if i.opcode == "dot")
+        return comp_dot_cache[name]
+
+    def walk(comp: Computation, mult: float):
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                b = _NAMED_RE["body"].search(ins.attrs)
+                c = _NAMED_RE["cond"].search(ins.attrs)
+                trips = while_trip_count(comps, c.group(1)) if c else 1
+                if b and b.group(1) in comps:
+                    walk(comps[b.group(1)], mult * trips)
+                continue
+            if op == "conditional":
+                br = _NAMED_RE["branches"].search(ins.attrs)
+                if br:
+                    names = [n.strip().lstrip("%") for n in br.group(1).split(",")
+                             if n.strip().lstrip("%") in comps]
+                    if names:
+                        best = max(names, key=comp_dots)
+                        walk(comps[best], mult)
+                continue
+            if op == "call":
+                cm = _NAMED_RE["calls"].search(ins.attrs) or \
+                    _NAMED_RE["to_apply"].search(ins.attrs)
+                if cm and cm.group(1) in comps:
+                    walk(comps[cm.group(1)], mult)
+                continue
+            if op == "fusion":
+                cm = _NAMED_RE["calls"].search(ins.attrs)
+                if cm and cm.group(1) in comps:
+                    totals.flops += comp_dots(cm.group(1)) * mult
+            if op == "dot":
+                totals.flops += dot_flops(ins, comp) * mult
+            matched_coll = False
+            for kind in COLLECTIVE_KINDS:
+                if op == kind or op == kind + "-start":
+                    totals.add_collective(
+                        kind, _shape_elems_bytes(ins.result_type)[1], mult)
+                    matched_coll = True
+                    break
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _MATERIALIZING or matched_coll:
+                # HBM model: every materialized buffer is written once and
+                # read ~once (2x result bytes).  Operand sizes are NOT summed:
+                # fusions inside while bodies list whole carried buffers as
+                # operands while touching only a slice, which inflates the
+                # term by an order of magnitude (measured 12x on rwkv6).
+                res_b = _shape_elems_bytes(ins.result_type)[1]
+                if base == "dynamic-update-slice":
+                    upd = (comp.types.get(ins.operands[1], "")
+                           if len(ins.operands) > 1 else "")
+                    nbytes = 2 * _shape_elems_bytes(upd)[1]
+                elif base == "scatter":
+                    upd = (comp.types.get(ins.operands[2], "")
+                           if len(ins.operands) > 2 else "")
+                    nbytes = 2 * _shape_elems_bytes(upd)[1]
+                else:
+                    nbytes = 2 * res_b
+                totals.bytes += nbytes * mult
+
+    walk(comps[entry], 1.0)
+    return totals

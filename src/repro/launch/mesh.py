@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 chips per pod (v5e); multi-pod adds a 2-pod DCI axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (requires host-platform devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,130 @@
+"""n-TangentProp as a first-class LM-training feature: jet smoothness
+regularization of a dense transformer w.r.t. its input embeddings.
+
+TangentProp's original use was penalizing first derivatives along invariance
+directions; the quasilinear n-jet makes arbitrary-order Sobolev penalties
+affordable for transformers.  This propagates an exact order-n Taylor jet of
+the *whole dense block stack* (RMSNorm -> GQA attention with softmax -> GeGLU/
+SwiGLU) along a random embedding-space direction and penalizes the top
+coefficient's norm -- all through core/jet.py rules (DESIGN.md section 2,
+"beyond the paper").
+
+Cost control: the jet rides a token slice (first ``reg_tokens`` positions)
+and full (unblocked) attention -- the regularizer is O(order^2) small
+matmuls on a short sequence, negligible next to the main loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import jet as J
+from repro.models.layers import embed
+from repro.models.transformer import _is_moe, _pattern_at
+
+REG_TOKENS = 64
+
+
+def _jet_rope(x: J.Jet, positions, theta: float) -> J.Jet:
+    from repro.models.layers import rope
+    return J.jmap(lambda c: rope(c, positions, theta), x)
+
+
+def _jet_attn(lp, cfg: ArchConfig, x: J.Jet, window) -> J.Jet:
+    s = x.shape[-2]
+    pos = jnp.arange(s)
+    q = J.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = J.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v = J.einsum("bsd,dhk->bshk", x, lp["wv"])
+    if "q_norm" in lp:
+        q = J.rms_norm(q, 1.0 + lp["q_norm"], offset=0.0)
+        k = J.rms_norm(k, 1.0 + lp["k_norm"], offset=0.0)
+    q = _jet_rope(q, pos, cfg.rope_theta)
+    k = _jet_rope(k, pos, cfg.rope_theta)
+    kvh, hd = lp["wk"].shape[1], lp["wk"].shape[2]
+    g = cfg.n_heads // kvh
+    qg = J.jmap(lambda c: c.reshape(c.shape[0], s, kvh, g, hd), q)
+    scores = J.scale(J.einsum("bqhgd,bkhd->bhgqk", qg, k), hd ** -0.5)
+    if cfg.attn_softcap:
+        scores = J.scale(J.tanh(J.scale(scores, 1.0 / cfg.attn_softcap)),
+                         cfg.attn_softcap)
+    iq = jnp.arange(s)[:, None]
+    ik = jnp.arange(s)[None, :]
+    mask = ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    scores = J.where(mask, scores, J.const(jnp.full((), -2e38, scores.dtype),
+                                           scores.order, like=scores))
+    probs = J.softmax(scores, axis=-1)
+    out = J.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = J.jmap(lambda c: c.reshape(c.shape[0], s, kvh * g, hd), out)
+    return J.einsum("bshk,hkd->bsd", out, lp["wo"])
+
+
+def _jet_mlp(lp, cfg: ArchConfig, x: J.Jet) -> J.Jet:
+    if cfg.mlp in ("swiglu", "geglu"):
+        gu = J.einsum("bsd,dtf->bstf", x, lp["wi"])
+        gate = J.jmap(lambda c: c[..., 0, :], gu)
+        up = J.jmap(lambda c: c[..., 1, :], gu)
+        act = J.silu(gate) if cfg.mlp == "swiglu" else J.gelu(gate)
+        return J.einsum("bsf,fd->bsd", J.mul(act, up), lp["wo"])
+    if cfg.mlp == "gelu_mlp":
+        return J.einsum("bsf,fd->bsd", J.gelu(J.einsum("bsd,df->bsf", x, lp["wi"])),
+                        lp["wo"])
+    raise NotImplementedError(cfg.mlp)
+
+
+def jet_forward_dense(params, cfg: ArchConfig, tokens: jnp.ndarray,
+                      order: int, direction: jnp.ndarray | None = None) -> J.Jet:
+    """Order-n jet of final hidden states along an embedding direction.
+
+    Dense attention stacks only (DESIGN.md section 4 applicability table)."""
+    if cfg.block_type != "attn" or cfg.moe is not None:
+        raise NotImplementedError("jet regularizer: dense attention archs only")
+    ct = (jnp.float64 if params["final_norm"].dtype == jnp.float64
+          else jnp.float32)  # compute dtype follows params (tests run f64)
+    x0 = embed(params["embed"], tokens, cfg).astype(ct)
+    if direction is None:
+        direction = jnp.sign(jnp.sin(jnp.arange(x0.size, dtype=ct)
+                                     )).reshape(x0.shape) * (x0.shape[-1] ** -0.5)
+    x = J.seed(x0, direction.astype(x0.dtype), order)
+
+    g = cfg.group
+    layers = params["stack"]["groups"]["layers"]
+    n_groups = cfg.n_layers // g
+
+    def group_body(coeffs, gparams):
+        x = J.Jet(coeffs)
+        for j in range(g):
+            lp = gparams["layers"][j]
+            window = cfg.window if _pattern_at(cfg, j) == "local" else None
+            h = J.rms_norm(x, lp["ln1"].astype(ct), offset=1.0)
+            x = J.add(x, _jet_attn(_f32(lp["attn"], ct), cfg, h, window))
+            h = J.rms_norm(x, lp["ln2"].astype(ct), offset=1.0)
+            x = J.add(x, _jet_mlp(_f32(lp["ffn"], ct), cfg, h))
+        return x.coeffs, None
+
+    coeffs, _ = jax.lax.scan(group_body, x.coeffs,
+                             {"layers": _f32(layers, ct)})
+    x = J.Jet(coeffs)
+    for r, lp in enumerate(params["stack"]["rest"]):
+        window = cfg.window if _pattern_at(cfg, n_groups * g + r) == "local" else None
+        h = J.rms_norm(x, lp["ln1"].astype(ct), offset=1.0)
+        x = J.add(x, _jet_attn(_f32(lp["attn"], ct), cfg, h, window))
+        h = J.rms_norm(x, lp["ln2"].astype(ct), offset=1.0)
+        x = J.add(x, _jet_mlp(_f32(lp["ffn"], ct), cfg, h))
+    return J.rms_norm(x, params["final_norm"].astype(ct), offset=1.0)
+
+
+def _f32(tree, ct=jnp.float32):
+    return jax.tree_util.tree_map(lambda a: a.astype(ct), tree)
+
+
+def ntp_smoothness(params, cfg: ArchConfig, batch, order: int) -> jnp.ndarray:
+    """Mean squared top Taylor coefficient of the hidden states: an exact
+    order-n Sobolev penalty, one quasilinear forward."""
+    tokens = batch["tokens"][:, :REG_TOKENS]
+    jet = jet_forward_dense(params, cfg, tokens, order)
+    return jnp.mean(jet.coeffs[order] ** 2)

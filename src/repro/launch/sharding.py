@@ -1,0 +1,309 @@
+"""Binding logical parameter/input/state specs to a physical mesh, plus the
+jitted step builders used by the dry-run, the trainer, and the server.
+
+FSDP: for archs past the threshold, every large parameter additionally
+shards its largest still-replicated (and divisible) dimension over the data
+axis; XLA inserts the all-gather at use / reduce-scatter at grad time
+(GSPMD handles this from the in_shardings alone).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.data.tokens import synthetic_batch
+from repro.models import transformer as tfm
+from repro.models.sharding_rules import Rules, bind_pspec, make_rules, use_rules
+from repro.optim import AdamState, adam_abstract, adam_update
+
+FSDP_PARAM_THRESHOLD = 20_000_000_000  # params; gemma2-27b and llama4 qualify
+FSDP_LEAF_MIN = 1 << 22                # don't FSDP tiny leaves
+
+
+def arch_param_count(cfg: ArchConfig) -> int:
+    import math
+    params, _ = tfm.init_model(cfg, abstract=True)
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+
+
+def wants_fsdp(cfg: ArchConfig) -> bool:
+    return arch_param_count(cfg) >= FSDP_PARAM_THRESHOLD
+
+
+def fsdp_extend(spec: P, shape, rules: Rules, axis_size: int) -> P:
+    """Add an "fsdp" entry on the largest unsharded, divisible dim."""
+    if not rules.fsdp:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and n % axis_size == 0 and n > best_size:
+            best, best_size = i, n
+    if best is None:
+        return spec
+    entries[best] = "fsdp"
+    return P(*entries)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding entries whose dimension doesn't divide the axis size --
+    in_shardings (unlike constraints) require exact divisibility.  Keeps the
+    framework robust to awkward public configs (granite's 49155 vocab,
+    rwkv6's 40 heads)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        out.append(e if size > 0 and dim % size == 0 else None)
+    return P(*out)
+
+
+def bind_param_shardings(mesh, pspecs, abstract_params, rules: Rules):
+    axis_size = mesh.shape.get("data", 1)
+
+    import math
+
+    def bind(spec, leaf):
+        if rules.fsdp and math.prod(leaf.shape) >= FSDP_LEAF_MIN:
+            spec = fsdp_extend(spec, leaf.shape, rules, axis_size)
+        bound = bind_pspec(spec, rules)
+        return NamedSharding(mesh, sanitize_spec(bound, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map(bind, pspecs, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# input / state specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(rules: Rules, ndim: int) -> P:
+    return P(*((rules.resolve("batch"),) + (None,) * (ndim - 1)))
+
+
+def input_shardings(mesh, cfg: ArchConfig, shape: ShapeCfg, rules: Rules):
+    specs = abstract_inputs(cfg, shape)
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, batch_pspec(rules, len(l.shape))), specs)
+
+
+def abstract_inputs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    out = {"tokens": jax.ShapeDtypeStruct((b, s - (cfg.vlm_image_tokens or 0)),
+                                          jnp.int32)}
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.dtype(cfg.dtype)
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder.seq, cfg.d_model), dt)
+    if cfg.vlm_image_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vlm_image_tokens, tfm.VLM_EMBED_DIM), dt)
+    return out
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def state_pspecs(cfg: ArchConfig, shape: ShapeCfg, rules: Rules,
+                 mesh) -> Dict[str, Any]:
+    """Decode-state sharding: batch over (pod, data) when it divides, else
+    sequence-parallel KV (long_500k: B=1 -> shard the 512k cache over data);
+    heads/head_dim over model when divisible."""
+    from repro.configs.base import MODEL_AXIS
+    st = tfm.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    batch_ax = rules.resolve("batch")
+    n_batch = 1
+    for a in (rules.batch or ()):
+        n_batch *= mesh.shape[a]
+    b_entry = batch_ax if _div(shape.global_batch, n_batch) and n_batch > 1 else None
+    seq_entry = rules.batch[-1] if (b_entry is None and rules.batch) else None
+
+    def kv_spec(leaf):  # (L, B, S, kvh, hd)
+        _, _, s, kvh, hd = leaf.shape
+        head_entry = "model" if _div(kvh, MODEL_AXIS) else None
+        hd_entry = "model" if (head_entry is None and _div(hd, MODEL_AXIS)) else None
+        return P(None, b_entry, seq_entry if _div(s, mesh.shape.get("data", 1)) else None,
+                 head_entry, hd_entry)
+
+    out: Dict[str, Any] = {"pos": P()}
+    for key in ("kv", "shared_kv", "cross_kv"):
+        if key in st:
+            out[key] = type(st[key])(*(kv_spec(l) for l in st[key]))
+    if "mamba" in st:
+        ssm, conv = st["mamba"]
+        h = ssm.shape[2]
+        out["mamba"] = type(st["mamba"])(
+            P(None, b_entry, "model" if _div(h, MODEL_AXIS) else None, None, None),
+            P(None, b_entry, None, "model" if _div(conv.shape[-1], MODEL_AXIS) else None))
+    if "rwkv" in st:
+        wkv, s1, s2 = st["rwkv"]
+        h, hd = wkv.shape[2], wkv.shape[3]
+        wkv_spec = P(None, b_entry, "model" if _div(h, MODEL_AXIS) else None,
+                     None if _div(h, MODEL_AXIS) else ("model" if _div(hd, MODEL_AXIS) else None),
+                     None)
+        d_spec = P(None, b_entry, None, "model" if _div(s1.shape[-1], MODEL_AXIS) else None)
+        out["rwkv"] = type(st["rwkv"])(wkv_spec, d_spec, d_spec)
+    return out
+
+
+def state_shardings(mesh, cfg, shape, rules):
+    specs = state_pspecs(cfg, shape, rules, mesh)
+    st_abs = tfm.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+
+    def bind(s, leaf):
+        if not isinstance(s, P):
+            return s
+        return NamedSharding(mesh, sanitize_spec(bind_pspec(s, rules),
+                                                 leaf.shape if hasattr(leaf, "shape")
+                                                 else (), mesh))
+
+    return jax.tree_util.tree_map(bind, specs, st_abs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                   # jitted function
+    arg_specs: Tuple          # abstract args for .lower()
+    rules: Rules
+    param_shardings: Any
+    opt_state_dtype: Optional[str] = None
+
+
+DEFAULT_ACCUM_ABOVE = 100_000_000_000  # grad-accum for >100B-param models
+
+
+def build_train_step(cfg: ArchConfig, mesh, shape: ShapeCfg, *,
+                     knobs: tfm.Knobs = tfm.Knobs(),
+                     fsdp: Optional[bool] = None,
+                     lr: float = 3e-4,
+                     accum: Optional[int] = None,
+                     policy: str = "tp",
+                     opt_state_dtype: Optional[str] = None) -> BuiltStep:
+    """jit(train_step) with in/out shardings bound to the mesh."""
+    fsdp = wants_fsdp(cfg) if fsdp is None else fsdp
+    if accum is None:
+        accum = 4 if arch_param_count(cfg) >= DEFAULT_ACCUM_ABOVE else 1
+    while shape.global_batch % accum:
+        accum //= 2
+    rules = make_rules(mesh, fsdp=fsdp, policy=policy)
+    abstract_params, pspecs = tfm.init_model(cfg, abstract=True)
+    p_shard = bind_param_shardings(mesh, pspecs, abstract_params, rules)
+    opt_abs = adam_abstract(abstract_params, opt_state_dtype)
+    o_shard = AdamState(NamedSharding(mesh, P()),
+                        jax.tree_util.tree_map(
+                            lambda s, l: s, p_shard, opt_abs.m),
+                        jax.tree_util.tree_map(lambda s, l: s, p_shard, opt_abs.v))
+    in_batch = input_shardings(mesh, cfg, shape, rules)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(tfm.train_loss, has_aux=True)(
+            params, cfg, batch, knobs)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            if accum == 1:
+                (loss, metrics), grads = grad_fn(params, batch)
+            else:
+                from repro.models.sharding_rules import shard as _shard
+
+                def micro(carry, mb):
+                    mb = jax.tree_util.tree_map(
+                        lambda a: _shard(a, "batch", *([None] * (a.ndim - 1))), mb)
+                    (l, m), g = grad_fn(params, mb)
+                    gsum, lsum = carry
+                    return (jax.tree_util.tree_map(jnp.add, gsum, g),
+                            lsum + l), m
+
+                mbs = jax.tree_util.tree_map(
+                    lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                    batch)
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), ms = jax.lax.scan(micro, (g0, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+                loss = lsum / accum
+                metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+            new_params, new_opt = adam_update(grads, opt_state, params, lr,
+                                              grad_clip=1.0)
+            return new_params, new_opt, loss, metrics
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_shard, o_shard, in_batch),
+                 out_shardings=(p_shard, o_shard, NamedSharding(mesh, P()),
+                                NamedSharding(mesh, P())),
+                 donate_argnums=(0, 1))
+    args = (abstract_params, opt_abs, abstract_inputs(cfg, shape))
+    return BuiltStep(fn, args, rules, p_shard, opt_state_dtype)
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, shape: ShapeCfg, *,
+                       knobs: tfm.Knobs = tfm.Knobs()) -> BuiltStep:
+    # >=FSDP-threshold models shard weights over data even at inference
+    # (TP-16 alone leaves llama4 at ~50 GiB/chip); all-gather-per-use
+    rules = make_rules(mesh, fsdp=wants_fsdp(cfg))
+    abstract_params, pspecs = tfm.init_model(cfg, abstract=True)
+    p_shard = bind_param_shardings(mesh, pspecs, abstract_params, rules)
+    in_batch = input_shardings(mesh, cfg, shape, rules)
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            x, aux, n_prefix, _ = tfm.forward_seq(params, cfg, batch, knobs)
+            from repro.models.layers import logits
+            return logits(params["embed"], x[:, -1:], cfg)[:, 0]
+
+    fn = jax.jit(prefill_step, in_shardings=(p_shard, in_batch))
+    return BuiltStep(fn, (abstract_params, abstract_inputs(cfg, shape)), rules,
+                     p_shard)
+
+
+def build_serve_step(cfg: ArchConfig, mesh, shape: ShapeCfg, *,
+                     knobs: tfm.Knobs = tfm.Knobs()) -> BuiltStep:
+    """One-token decode against a seq_len-deep cache/state."""
+    sp = shape.global_batch == 1
+    rules = make_rules(mesh, sp=sp, fsdp=wants_fsdp(cfg))
+    abstract_params, pspecs = tfm.init_model(cfg, abstract=True)
+    p_shard = bind_param_shardings(mesh, pspecs, abstract_params, rules)
+    st_abs = tfm.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    st_shard = state_shardings(mesh, cfg, shape, rules)
+    tok_shard = {"token": NamedSharding(mesh, batch_pspec(rules, 2))} \
+        if shape.global_batch > 1 else \
+        {"token": NamedSharding(mesh, P(None, None))}
+
+    def serve_step(params, token, state):
+        with use_rules(rules):
+            return tfm.decode_step(params, cfg, token, state, knobs)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, tok_shard["token"], st_shard),
+                 out_shardings=(NamedSharding(mesh, P()), st_shard),
+                 donate_argnums=(2,))
+    args = (abstract_params, abstract_inputs(cfg, shape)["token"], st_abs)
+    return BuiltStep(fn, args, rules, p_shard)
+
+
+def build_step(cfg: ArchConfig, mesh, shape: ShapeCfg, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,5 @@
+"""Model zoo: composable transformer/MoE/SSM/RWKV/hybrid stacks + PINN MLP."""
+
+from . import attention, gla, layers, moe, rwkv, ssm, transformer
+from .transformer import (Knobs, decode_state_specs, decode_step, forward_seq,
+                          init_model, prefill, train_loss)

@@ -1,0 +1,301 @@
+"""Attention: GQA/MQA/MHA, sliding-window, softcap, qk_norm, KV cache.
+
+Training/prefill uses a flash-style *blocked* formulation in pure JAX: scan
+over query chunks with an online-softmax inner scan over KV chunks, so peak
+activation memory is O(S * chunk) instead of O(S^2) -- this is what makes the
+prefill_32k dry-run cells fit.  Local (sliding-window) layers instead
+``dynamic_slice`` the exact KV span (chunk + window), paying zero wasted
+FLOPs; global layers sweep all KV chunks with a causal mask (the ~2x masked
+waste on strictly-causal blocks is a recorded hillclimb item, EXPERIMENTS.md
+section Perf).
+
+Decode attends one new token against a ring-buffer cache of seq_len entries
+written at ``pos % S`` -- O(1) update, no roll-copy, window masking by
+absolute position distance.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from .layers import Maker, Params, rms_norm, rope, softcap
+
+NEG = -2.0e38  # safe -inf for fp32 masks
+
+
+def attn_specs(cfg: ArchConfig):
+    """Pick shardable dims for the 16-way model axis.
+
+    Preference order: shard heads (Megatron -- softmax stays local); if the
+    head count doesn't divide (gemma3: 8 q heads, llama4: 40, whisper: 20),
+    shard head_dim (pays a contraction all-reduce); tiny kv projections that
+    divide neither way are replicated.  cfg.attn_sharding == "replicate"
+    forces fully replicated attention weights: ~1 GiB/device extra weight
+    memory buys zero attention collectives (section Perf knob)."""
+    from repro.configs.base import MODEL_AXIS as MA
+
+    if cfg.attn_sharding == "replicate":
+        return P(None, None, None), P(None, None, None), P(None, None, None)
+
+    def pick(n_heads, hd):
+        if n_heads % MA == 0:
+            return P(None, "model", None), "heads"
+        if hd % MA == 0:
+            # hd-sharding pays score all-reduces; right when attention is a
+            # large flop share (whisper MHA, llama4 40H).  Archs with small/
+            # windowed attention set attn_sharding="replicate" instead
+            # (gemma3: measured 2x better -- section Perf 4.1/4.4).
+            return P(None, None, "model"), "hd"
+        return P(None, None, None), "none"
+
+    q_spec, q_kind = pick(cfg.n_heads, cfg.hd)
+    kv_spec, kv_kind = pick(cfg.n_kv_heads, cfg.hd)
+    if q_kind == "heads" and kv_kind != "heads":
+        # replicating the (small) kv projection keeps scores/softmax local;
+        # hd-sharded kv against heads-sharded q forces SPMD full remats
+        kv_spec, kv_kind = P(None, None, None), "none"
+    elif q_kind == "hd" and cfg.hd % MA == 0:
+        kv_spec, kv_kind = P(None, None, "model"), "hd"  # align kv on hd
+    if q_kind == "heads":
+        o_spec = P("model", None, None)
+    elif q_kind == "hd":
+        o_spec = P(None, "model", None)
+    else:
+        o_spec = P(None, None, None)
+    return q_spec, kv_spec, o_spec
+
+
+def q_hd_sharded(cfg: ArchConfig) -> bool:
+    """True when attention shards head_dim (heads don't divide the axis)."""
+    q_spec, _, _ = attn_specs(cfg)
+    return len(q_spec) == 3 and q_spec[2] == "model"
+
+
+def init_attn(mk: Maker, cfg: ArchConfig, cross: bool = False) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q_spec, kv_spec, o_spec = attn_specs(cfg)
+    p = {
+        "wq": mk.param((d, h, hd), q_spec),
+        "wk": mk.param((d, kvh, hd), kv_spec),
+        "wv": mk.param((d, kvh, hd), kv_spec),
+        "wo": mk.param((h, hd, d), o_spec),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = mk.zeros((hd,), P(None))
+        p["k_norm"] = mk.zeros((hd,), P(None))
+    return p
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 kv_x: jnp.ndarray | None = None):
+    """Returns q:(B,Sq,H,hd), k,v:(B,Skv,KVH,hd), with qk_norm and no rope yet."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _scores(q, k, cfg: ArchConfig):
+    """(B, KVH, G, Sq, Skv) grouped scores (GQA: G = H // KVH)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * (hd ** -0.5)
+    return softcap(s.astype(jnp.float32), cfg.attn_softcap)
+
+
+def _apply_probs(probs, v):
+    """(B,KVH,G,Sq,Skv) x (B,Skv,KVH,hd) -> (B,Sq,H,hd)."""
+    b, kvh, g, sq, _ = probs.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, kvh * g, -1)
+
+
+# ---------------------------------------------------------------------------
+# full (unblocked) attention -- encoder / cross-attention / tiny sequences
+# ---------------------------------------------------------------------------
+
+def full_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                   *, causal: bool, window: Optional[int] = None,
+                   kv_x: jnp.ndarray | None = None,
+                   positions: jnp.ndarray | None = None,
+                   use_rope: bool = True):
+    """Returns (out, (k, v)) -- k/v post-rope, ready to become a cache."""
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    skv = k.shape[1]
+    if use_rope:
+        pos_q = jnp.arange(sq) if positions is None else positions
+        pos_k = jnp.arange(skv)
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_k, cfg.rope_theta)
+    s = _scores(q, k, cfg)
+    if causal:
+        iq = jnp.arange(sq)[:, None]
+        ik = jnp.arange(skv)[None, :]
+        mask = ik <= iq
+        if window is not None:
+            mask &= ik > iq - window
+        s = jnp.where(mask, s, NEG)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = _apply_probs(probs, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# blocked causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def blocked_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                      *, window: Optional[int],
+                      q_chunk: int = 512, kv_chunk: int = 1024):
+    """Causal self-attention, O(S*chunk) memory.  window=None -> global.
+    Returns (out, (k, v)) like full_attention."""
+    b, s, d = x.shape
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    if s % q_chunk or s % kv_chunk:
+        return full_attention(p, cfg, x, causal=True, window=window)
+
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    kvh, hd = k.shape[2], k.shape[3]
+    g = cfg.n_heads // kvh
+    nq = s // q_chunk
+
+    # q rides the scan as xs (static slicing): the transpose of scan-ys is a
+    # well-sharded stack, whereas dynamic-slice-by-index transposes into a
+    # replicated scatter accumulation (measured 2.3 TB of all-gather on
+    # gemma3 -- section Perf)
+    qb = jnp.moveaxis(q.reshape(b, nq, q_chunk, cfg.n_heads, hd), 1, 0)
+
+    if window is not None and window + q_chunk < s:
+        # local layers: slice the exact KV span; zero wasted FLOPs
+        span = q_chunk + window
+        span = min(span + (-span) % kv_chunk, s)
+
+        def one_q(_, inp):
+            qi, qc = inp
+            qs = qi * q_chunk
+            ks_start = jnp.clip(qs + q_chunk - span, 0, s - span)
+            kc = jax.lax.dynamic_slice_in_dim(k, ks_start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ks_start, span, axis=1)
+            sc = _scores(qc, kc, cfg)  # (B,KVH,G,Cq,span)
+            ipos = qs + jnp.arange(q_chunk)[:, None]
+            jpos = ks_start + jnp.arange(span)[None, :]
+            mask = (jpos <= ipos) & (jpos > ipos - window)
+            sc = jnp.where(mask, sc, NEG)
+            probs = jax.nn.softmax(sc, axis=-1)
+            return None, _apply_probs(probs, vc)  # (B,Cq,H,hd)
+
+        # flash-attention memory profile: never save probabilities for the
+        # backward -- recompute them per chunk (policy=nothing_saveable)
+        one_q = jax.checkpoint(one_q,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+        _, outs = jax.lax.scan(one_q, None, (jnp.arange(nq), qb))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.n_heads, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+    # global layers: online-softmax sweep over all KV chunks
+    nk = s // kv_chunk
+    kb = k.reshape(b, nk, kv_chunk, kvh, hd)
+    vb = v.reshape(b, nk, kv_chunk, kvh, hd)
+
+    def one_q(_, inp):
+        qi, qc = inp
+        qs = qi * q_chunk
+        ipos = qs + jnp.arange(q_chunk)[:, None]
+
+        def inner(carry, kj):
+            m, l, acc = carry
+            kc, vc = kb[:, kj], vb[:, kj]
+            sc = _scores(qc, kc, cfg)  # (B,KVH,G,Cq,Ck)
+            jpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jpos <= ipos
+            if window is not None:
+                mask &= jpos > ipos - window
+            sc = jnp.where(mask, sc, NEG)
+            m_new = jnp.maximum(m, sc.max(-1))
+            corr = jnp.exp(m - m_new)
+            pr = jnp.exp(sc - m_new[..., None])
+            l_new = l * corr + pr.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", pr.astype(vc.dtype), vc)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk))
+        out = acc / l[..., None]  # (B,KVH,G,Cq,hd)
+        return None, jnp.moveaxis(out.reshape(b, kvh * g, q_chunk, hd), 1, 2)
+
+    # flash-attention memory profile (see local branch above)
+    one_q = jax.checkpoint(one_q,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(one_q, None, (jnp.arange(nq), qb))  # (nq,B,Cq,H,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.n_heads, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S, KVH, hd)
+    v: jnp.ndarray  # (B, S, KVH, hd)
+
+
+def decode_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     cache: KVCache, pos: jnp.ndarray,
+                     *, window: Optional[int],
+                     cross: bool = False) -> tuple[jnp.ndarray, KVCache]:
+    """One-token step.  x: (B, 1, D); pos: () int32 -- absolute position of the
+    new token; the cache holds the previous seq_len tokens (ring buffer)."""
+    b, _, _ = x.shape
+    s_max = cache.k.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    if not cross:
+        q = rope(q, pos[None], cfg.rope_theta)
+        k_new = rope(k_new, pos[None], cfg.rope_theta)
+        slot = jnp.mod(pos, s_max)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        cache = KVCache(ck, cv)
+    sc = _scores(q, cache.k, cfg)  # (B,KVH,G,1,S)
+    # absolute position of ring slot j given write head at slot(pos): entries
+    # j hold positions pos - ((slot - j) mod S)
+    slot = jnp.mod(pos, s_max)
+    j = jnp.arange(s_max)
+    age = jnp.mod(slot - j, s_max)  # 0 for the newest token
+    kpos = pos - age
+    mask = kpos >= 0
+    if window is not None and not cross:
+        mask &= age < window
+    if not cross:
+        sc = jnp.where(mask[None, None, None, None, :], sc, NEG)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = _apply_probs(probs, cache.v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, seq: int, n_layers: int,
+                  abstract: bool = False, dtype=jnp.bfloat16) -> KVCache:
+    shape = (n_layers, batch, seq, cfg.n_kv_heads, cfg.hd)
+    if abstract:
+        return KVCache(jax.ShapeDtypeStruct(shape, dtype),
+                       jax.ShapeDtypeStruct(shape, dtype))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

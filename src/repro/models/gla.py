@@ -1,0 +1,157 @@
+"""Chunked gated linear attention: the shared recurrence engine for Mamba2
+(SSD) and RWKV-6 (Finch).
+
+Recurrence (per head; Dk = key/state dim, Dv = value dim):
+
+    S_t = diag(d_t) S_{t-1} + k_t v_t^T          d_t in (0,1]
+    y_t = q_t^T S_t            (mamba mode: current token included, no bonus)
+    y_t = q_t^T (S_{t-1} + diag(u) k_t v_t^T)    (rwkv mode: u-bonus diagonal)
+
+Chunked evaluation (chunk C): with L_t = sum_{s<=t} log d_s (in-chunk cumsum),
+
+    inter:  y_t += (q_t * exp(L_t'))  @ S_prev
+    intra:  A[t,s] = sum_d q[t,d] k[s,d] exp(L'_t[d] - L_s[d]),  s <= t(-1)
+    state:  S_new = diag(exp(L_C)) S_prev + sum_s (k_s * exp(L_C - L_s)) v_s^T
+
+where L' is L shifted by one step in rwkv mode (decay applies *before* the
+readout).  All exponents are differences with s <= t, hence <= 0 -- stable in
+fp32 regardless of how aggressive the decay is (no 1/P blow-up).
+
+Two decay layouts share this code:
+  * scalar per head (mamba2): A factorizes, intra-chunk runs on the MXU as a
+    plain (C,C) matmul times a decay matrix;
+  * vector per channel (rwkv6): the pairwise tensor (C,C,Dk) is materialized
+    per chunk -- the honest cost of per-channel gating (hillclimb note:
+    secondary chunking can push this back onto the MXU).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class GLAState(NamedTuple):
+    s: jnp.ndarray  # (B, H, Dk, Dv)
+
+
+def chunked_gla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_decay: jnp.ndarray, *, u: Optional[jnp.ndarray] = None,
+                mode: str = "mamba", chunk: int = 64,
+                state: Optional[jnp.ndarray] = None,
+                pair_bf16: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); log_decay: (B,S,H,Dk) or (B,S,H,1)
+    (scalar decay broadcast).  u: (H,Dk) rwkv bonus.  Returns (y, final_state).
+    """
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    scalar_decay = log_decay.shape[-1] == 1
+
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    ld = log_decay.astype(f32)
+
+    def reshape_c(x):
+        return x.reshape(b, nc, c, h, x.shape[-1])
+
+    qc, kc, vc, ldc = (reshape_c(x) for x in (qf, kf, vf, ld))
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+
+    rwkv = mode == "rwkv"
+
+    def body(s_prev, inputs):
+        qi, ki, vi, ldi = inputs  # (B, C, H, *)
+        L = jnp.cumsum(ldi, axis=1)           # inclusive in-chunk log decay
+        Lq = (L - ldi) if rwkv else L         # shift: decay before readout
+        Ltot = L[:, -1:]                      # (B,1,H,Dk*)
+
+        # ----- inter-chunk: contribution of the carried state
+        q_eff = _bcast(qi * jnp.exp(Lq), dk)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_eff, s_prev)
+
+        # ----- intra-chunk
+        t_idx = jnp.arange(c)
+        mask = (t_idx[:, None] > t_idx[None, :]) if rwkv else \
+               (t_idx[:, None] >= t_idx[None, :])
+        if scalar_decay:
+            # A[t,s] = (q_t . k_s) * exp(Lq_t - L_s): MXU matmul x decay matrix
+            dots = jnp.einsum("bchk,bshk->bhcs", qi, ki)
+            dec = Lq[..., 0].transpose(0, 2, 1)[:, :, :, None] - \
+                  L[..., 0].transpose(0, 2, 1)[:, :, None, :]  # (B,H,C,C)
+            A = dots * jnp.exp(jnp.where(mask[None, None], dec, -jnp.inf))
+            A = jnp.where(mask[None, None], A, 0.0)
+            y_intra = jnp.einsum("bhcs,bshv->bchv", A, vi)
+        else:
+            # per-channel decay: pairwise (B,C,C,H,Dk) tensor (rwkv6 cost).
+            # pair_bf16 halves the dominant HBM term: exp(diff) in (0,1] and
+            # q/k magnitudes make bf16 safe here (section Perf iteration).
+            diff = Lq[:, :, None] - L[:, None, :, :]        # t x s
+            diff = jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)
+            if pair_bf16:
+                # materialize the pairwise tensors in bf16 (exp(diff) lives in
+                # (0,1]); contraction accumulates in f32 on the MXU.  Output
+                # index order bcsh matches the consumer (kills layout
+                # transposes of the pairwise tensor).
+                eb = jnp.exp(diff.astype(jnp.bfloat16))      # exp in bf16 too
+                prod = eb * ki.astype(jnp.bfloat16)[:, None]  # (B,Ct,Cs,H,Dk)
+                A = jnp.einsum("bchk,bcshk->bcsh", qi.astype(jnp.bfloat16),
+                               prod, preferred_element_type=jnp.float32)
+                y_intra = jnp.einsum("bcsh,bshv->bchv", A, vi)
+            else:
+                A = jnp.einsum("bchk,bshk,bcshk->bhcs", qi, ki, jnp.exp(diff))
+                y_intra = jnp.einsum("bhcs,bshv->bchv", A, vi)
+
+        y = y_inter + y_intra
+        if rwkv and u is not None:
+            # diagonal bonus: y_t += (r_t . (u * k_t)) v_t
+            y = y + jnp.sum(qi * u.astype(f32) * ki, -1, keepdims=True) * vi
+
+        # ----- state update
+        k_eff = _bcast(ki * jnp.exp(Ltot - L), dk)
+        decay_tot = _bcast(jnp.exp(Ltot[:, 0]), dk)          # (B,H,Dk)
+        s_new = decay_tot[..., None] * s_prev + \
+            jnp.einsum("bchk,bchv->bhkv", k_eff, vi)
+        return s_new, y
+
+    # never save the pairwise decay tensors for backward -- recompute per
+    # chunk (flash-style memory profile for the linear-recurrence path)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1), ldc.swapaxes(0, 1))
+    state, ys = jax.lax.scan(body, state, xs)  # ys: (nc, B, C, H, Dv)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y.astype(q.dtype), state
+
+
+def _bcast(x, dk):
+    """Broadcast a scalar-decay (..., 1) tensor to (..., Dk) lazily."""
+    return jnp.broadcast_to(x, x.shape[:-1] + (dk,)) if x.shape[-1] == 1 else x
+
+
+def _bcast_k(x, dk):
+    return _bcast(x, dk)
+
+
+def gla_decode_step(q, k, v, log_decay, state, *, u=None, mode="mamba"):
+    """Single-token recurrence.  q,k: (B,H,Dk); v: (B,H,Dv);
+    log_decay: (B,H,Dk) or (B,H,1); state: (B,H,Dk,Dv)."""
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    d = jnp.exp(log_decay.astype(f32))
+    d = _bcast(d, kf.shape[-1])
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    if mode == "rwkv":
+        bonus = kv * (u.astype(f32)[None, :, :, None] if u is not None else 1.0)
+        y = jnp.einsum("bhk,bhkv->bhv", qf, state + bonus)
+        new_state = d[..., None] * state + kv
+    else:
+        new_state = d[..., None] * state + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qf, new_state)
+    return y.astype(q.dtype), new_state

@@ -1,0 +1,209 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, softcaps.
+
+Parameters are plain dicts of jnp arrays (no framework dependency).  Every
+init function has a matching ``*_specs`` twin used by the dry-run, which
+builds the identical pytree out of ShapeDtypeStructs without allocating.
+To keep that invariant automatically, inits are written against an abstract
+"creator" -- ``zeros``-like for real init, ShapeDtypeStruct for specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+class Boxed:
+    """A parameter leaf paired with its logical PartitionSpec.
+
+    Init functions build trees of Boxed leaves; ``unzip`` splits them into a
+    value tree and an aligned spec tree (launch/sharding binds the specs to
+    the mesh).  This keeps params and shardings structurally identical by
+    construction."""
+
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value, spec: P):
+        self.value = value
+        self.spec = spec
+
+
+def unzip(tree):
+    is_box = lambda x: isinstance(x, Boxed)
+    values = jax.tree_util.tree_map(lambda b: b.value, tree, is_leaf=is_box)
+    specs = jax.tree_util.tree_map(lambda b: b.spec, tree, is_leaf=is_box)
+    return values, specs
+
+
+class Maker:
+    """Creates either real initialized arrays or ShapeDtypeStructs (dry-run).
+
+    Logical axis vocabulary in specs: "model" (TP), "fsdp" (weight sharding),
+    None (replicated); binding to physical mesh axes happens in launch/.
+    """
+
+    def __init__(self, key: jax.Array | None, dtype, abstract: bool):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape, spec: P, scale: float | None = None, dtype=None) -> Boxed:
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return Boxed(jax.ShapeDtypeStruct(shape, dtype), spec)
+        if scale is None:  # fan-in normal init
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = fan_in ** -0.5
+        leaf = (jax.random.normal(self._next_key(), shape, jnp.float32) * scale
+                ).astype(dtype)
+        return Boxed(leaf, spec)
+
+    def zeros(self, shape, spec: P, dtype=None) -> Boxed:
+        dtype = dtype or self.dtype
+        return Boxed(jax.ShapeDtypeStruct(shape, dtype) if self.abstract
+                     else jnp.zeros(shape, dtype), spec)
+
+
+class StackedMaker(Maker):
+    """Maker that prepends a layer-group axis to every parameter it creates.
+
+    Used for ``lax.scan``-over-groups weight stacking: init functions written
+    for a single layer produce (n_groups, ...) leaves with a None-extended
+    PartitionSpec, so the same init code serves scanned and unrolled layers.
+    """
+
+    def __init__(self, base: Maker, lead: int):
+        super().__init__(None, base.dtype, base.abstract)
+        self._base = base
+        self._lead = lead
+
+    def _ext(self, shape, spec: P):
+        return (self._lead,) + tuple(shape), P(*((None,) + tuple(spec)))
+
+    def param(self, shape, spec: P, scale: float | None = None, dtype=None) -> Boxed:
+        shape, spec = self._ext(shape, spec)
+        return self._base.param(shape, spec, scale=scale, dtype=dtype)
+
+    def zeros(self, shape, spec: P, dtype=None) -> Boxed:
+        shape, spec = self._ext(shape, spec)
+        return self._base.zeros(shape, spec, dtype=dtype)
+
+
+# logical spec aliases (bound to physical axes in launch/sharding.py)
+REPL = P()
+COL = P(None, "model")            # (d_in, d_out/TP)  column-parallel
+ROW = P("model", None)            # (d_in/TP, d_out)  row-parallel
+VOCAB = P("model", None)          # embedding table rows over TP
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (x32 * inv).astype(dt) * (1.0 + gamma.astype(dt))
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([(x1 * cos - x2 * sin).astype(x.dtype),
+                            (x2 * cos + x1 * sin).astype(x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# dense FFNs
+# ---------------------------------------------------------------------------
+
+def init_mlp_block(mk: Maker, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": mk.param((d, 2, f), P(None, None, "model")),  # fused gate+up
+            "wo": mk.param((f, d), ROW),
+        }
+    if cfg.mlp == "gelu_mlp":
+        return {"wi": mk.param((d, f), COL), "wo": mk.param((f, d), ROW)}
+    if cfg.mlp == "rwkv_channel_mix":
+        return {
+            "mix_k": mk.param((d,), REPL, scale=0.1),
+            "wk": mk.param((d, f), COL),
+            "wv": mk.param((f, d), ROW),
+            "wr": mk.param((d, d), REPL),
+        }
+    raise ValueError(cfg.mlp)
+
+
+def apply_mlp_block(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    if cfg.mlp in ("swiglu", "geglu"):
+        gu = jnp.einsum("bsd,dtf->bstf", x, p["wi"])
+        gate, up = gu[..., 0, :], gu[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        return jnp.einsum("bsf,fd->bsd", act * up, p["wo"])
+    if cfg.mlp == "gelu_mlp":
+        return jnp.einsum("bsf,fd->bsd", jax.nn.gelu(x @ p["wi"], approximate=True), p["wo"])
+    if cfg.mlp == "rwkv_channel_mix":
+        # RWKV channel mix: token-shifted key, squared-relu, receptance gate
+        xs = token_shift(x, x_prev)
+        xk = x + (xs - x) * p["mix_k"]
+        k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+        r = jax.nn.sigmoid(x @ p["wr"])
+        return r * (k @ p["wv"])
+    raise ValueError(cfg.mlp)
+
+
+def token_shift(x: jnp.ndarray, x_prev: jnp.ndarray | None) -> jnp.ndarray:
+    """RWKV token shift: previous token's features (0 / carried state at t=0).
+
+    x: (B, S, D).  ``x_prev``: (B, 1, D) carry from the previous segment
+    (decode) or None (training from sequence start)."""
+    first = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev.astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(mk: Maker, cfg: ArchConfig) -> Params:
+    p = {"table": mk.param((cfg.vocab, cfg.d_model), VOCAB,
+                           scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = mk.param((cfg.d_model, cfg.vocab), COL)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0)
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def logits(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    return softcap(out, cfg.logit_softcap)

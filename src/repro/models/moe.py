@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (MegaBlocks-style).
+
+No (tokens x experts x capacity) one-hot is ever materialized -- at 32k
+sequences that tensor is astronomically large.  Instead:
+
+  1. top-k routing per token (renormalized softmax over the selected k);
+  2. argsort the (N*k) slot->expert assignments;
+  3. rank-within-expert via cumulative counts; slots with rank >= capacity
+     drop (overflow goes to a trash row, standard capacity-factor semantics);
+  4. scatter tokens into an (E*C, D) buffer, one dense einsum per expert
+     group (MXU), gather back with combine weights.
+
+Expert placement (logical specs, bound in launch/):
+  * E >= 16 (llama4: 128): expert-parallel -- E sharded over "model";
+  * E <  16 (mixtral: 8):  tensor-parallel inside each expert -- d_ff
+    sharded over "model" (E stays replicated).
+
+The auxiliary load-balance loss is the standard Switch formulation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from .layers import Maker, Params
+from .sharding_rules import shard
+
+EP_MIN_EXPERTS = 16  # model-axis size on both assigned meshes
+
+
+def init_moe(mk: Maker, cfg: ArchConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    if e >= EP_MIN_EXPERTS:  # expert parallel
+        wi_spec, wo_spec = P("model", None, None, None), P("model", None, None)
+    else:                    # TP within experts
+        wi_spec, wo_spec = P(None, None, None, "model"), P(None, "model", None)
+    return {
+        "router": mk.param((d, e), P(None, None), scale=d ** -0.5),
+        "wi": mk.param((e, d, 2, f), wi_spec),
+        "wo": mk.param((e, f, d), wo_spec),
+    }
+
+
+DISPATCH_GROUPS = 32  # = pod x data shards; local dispatch per group
+
+
+def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Dispatch is *group-local*: tokens are split into DISPATCH_GROUPS groups
+    aligned with the batch shards, each group routes and packs its own
+    (E, cap_g) buffer.  The buffer carries both a group dim (sharded like
+    batch) and an expert dim (sharded over "model" for EP), so routing
+    arithmetic never crosses shards; only the expert einsum's implicit
+    all-to-all moves tokens (GSPMD inserts it on the E axis)."""
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    n = b * s
+    g = DISPATCH_GROUPS
+    while n % g:
+        g //= 2
+    n_loc = n // g
+    cap = max(1, min(int(math.ceil(n_loc * k / e * cfg.moe.capacity_factor)), n_loc))
+
+    xf = x.reshape(g, n_loc, d)
+    xf = shard(xf, "batch", None, None)
+    gates = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32),
+                       p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)               # (G,N_loc,k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux loss (Switch): E * sum_e f_e * P_e (global averages)
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    def dispatch_one(xg, te, tw):
+        """xg: (N_loc, D); te/tw: (N_loc, k) -> local pack tables."""
+        flat_e = te.reshape(-1)
+        flat_w = tw.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(n_loc), k)
+        order = jnp.argsort(flat_e)
+        se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+        counts = jnp.bincount(flat_e, length=e)
+        offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                   jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(n_loc * k) - offsets[se]
+        keep = rank < cap
+        slot = jnp.where(keep, se * cap + rank, e * cap)  # e*cap = dropped
+        buf = jnp.zeros((e * cap, xg.shape[-1]), xg.dtype) \
+            .at[slot].set(xg[stok], mode="drop")
+        return buf.reshape(e, cap, -1), slot, stok, (sw * keep)
+
+    h_in, slot, stok, sw = jax.vmap(dispatch_one)(xf, top_e, top_w)
+    h_in = shard(h_in, "batch", "model" if e >= EP_MIN_EXPERTS else None,
+                 None, None)
+
+    gu = jnp.einsum("gecd,edtf->gectf", h_in, p["wi"])
+    act = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    h_out = jnp.einsum("gecf,efd->gecd", act, p["wo"])
+    h_out = shard(h_out, "batch", "model" if e >= EP_MIN_EXPERTS else None,
+                  None, None)
+
+    def combine_one(ho, slot, stok, sw):
+        out_buf = ho.reshape(e * cap, d)
+        gathered = out_buf.at[slot].get(mode="fill", fill_value=0)
+        gathered = gathered * sw.astype(out_buf.dtype)[:, None]
+        return jnp.zeros((n_loc, d), out_buf.dtype).at[stok].add(gathered)
+
+    y = jax.vmap(combine_one)(h_out, slot, stok, sw)
+    y = shard(y, "batch", None, None)
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,128 @@
+"""RWKV-6 (Finch) time-mix block: data-dependent per-channel decay.
+
+Signature features kept faithful: token-shift lerp mixes for r/k/v/g/w, the
+low-rank ("lora") data-dependent decay  w_t = exp(-exp(w0 + tanh(x_w A) B)),
+per-head u bonus on the current token, per-head group norm on the readout,
+SiLU gate.  The recurrence runs through the shared chunked GLA engine in
+vector-decay mode.  Channel-mix (the FFN half) lives in layers.py
+(``rwkv_channel_mix``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from .gla import chunked_gla, gla_decode_step
+from .layers import Maker, Params, token_shift
+
+LORA_R = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray      # (B, H, hd, hd)
+    shift_tm: jnp.ndarray  # (B, 1, D) last token seen by time-mix
+    shift_cm: jnp.ndarray  # (B, 1, D) last token seen by channel-mix
+
+
+def init_rwkv_tm(mk: Maker, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.hd
+    assert h * hd == d, (h, hd, d)
+    return {
+        "mix_r": mk.param((d,), P(None), scale=0.5),
+        "mix_k": mk.param((d,), P(None), scale=0.5),
+        "mix_v": mk.param((d,), P(None), scale=0.5),
+        "mix_g": mk.param((d,), P(None), scale=0.5),
+        "mix_w": mk.param((d,), P(None), scale=0.5),
+        "wr": mk.param((d, d), P(None, "model")),
+        "wk": mk.param((d, d), P(None, "model")),
+        "wv": mk.param((d, d), P(None, "model")),
+        "wg": mk.param((d, d), P(None, "model")),
+        "w0": mk.param((d,), P("model"), scale=1.0),
+        "w_lora_a": mk.param((d, LORA_R), P(None, None)),
+        "w_lora_b": mk.param((LORA_R, d), P(None, "model"), scale=0.01),
+        "u": mk.param((h, hd), P("model", None), scale=0.5),
+        "ln_x": mk.zeros((d,), P("model")),
+        "wo": mk.param((d, d), P("model", None)),
+    }
+
+
+def _mixes(p: Params, x: jnp.ndarray, xs: jnp.ndarray):
+    def lerp(name):
+        m = p[f"mix_{name}"]
+        return x + (xs - x) * m
+
+    return lerp("r"), lerp("k"), lerp("v"), lerp("g"), lerp("w")
+
+
+def _log_decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """w_t = exp(-exp(...)): returns log w_t (strictly negative)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    return -jnp.exp(p["w0"].astype(jnp.float32) + lora)
+
+
+def _group_norm(y: jnp.ndarray, gamma: jnp.ndarray, h: int, hd: int) -> jnp.ndarray:
+    """Per-head RMS norm on the (…, H, hd) readout."""
+    shp = y.shape
+    yh = y.reshape(shp[:-1] + (h, hd)).astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-5)
+    yn = (yh * inv).reshape(shp)
+    return yn.astype(y.dtype) * (1.0 + gamma.astype(y.dtype))
+
+
+def apply_rwkv_tm(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  chunk: int = 32, pair_bf16: bool = False) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xs = token_shift(x, None)
+    xr, xk, xv, xg, xw = _mixes(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    ld = _log_decay(p, xw).reshape(b, s, h, hd)
+    y, _ = chunked_gla(r, k, v, ld, u=p["u"], mode="rwkv", chunk=chunk,
+                       pair_bf16=pair_bf16)
+    y = _group_norm(y.reshape(b, s, d), p["ln_x"], h, hd)
+    return (y * g) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, n_layers: int,
+                    abstract: bool = False, dtype=jnp.float32) -> RWKVState:
+    h, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    shapes = ((n_layers, batch, h, hd, hd),
+              (n_layers, batch, 1, d),
+              (n_layers, batch, 1, d))
+    if abstract:
+        return RWKVState(*(jax.ShapeDtypeStruct(s, dtype) for s in shapes))
+    return RWKVState(*(jnp.zeros(s, dtype) for s in shapes))
+
+
+def rwkv_tm_decode_step(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                        wkv: jnp.ndarray, shift: jnp.ndarray
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,1,D); wkv: (B,H,hd,hd); shift: (B,1,D) previous token features."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xr, xk, xv, xg, xw = _mixes(p, x, shift.astype(x.dtype))
+    r = (xr @ p["wr"]).reshape(b, h, hd)
+    k = (xk @ p["wk"]).reshape(b, h, hd)
+    v = (xv @ p["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    ld = _log_decay(p, xw).reshape(b, h, hd)
+    y, new_wkv = gla_decode_step(r, k, v, ld, wkv.astype(jnp.float32),
+                                 u=p["u"], mode="rwkv")
+    y = _group_norm(y.reshape(b, d), p["ln_x"], h, hd)
+    out = ((y * g) @ p["wo"])[:, None]
+    return out, new_wkv.astype(wkv.dtype), x

@@ -1,0 +1,107 @@
+"""Logical-axis sharding, mesh-agnostic.
+
+Model code annotates activations with *logical* axis names ("batch", "model",
+"seq", None); the launcher activates a ``Rules`` binding that maps them to
+physical mesh axes.  With no active rules (pure-CPU unit tests) every
+annotation is a no-op, so the same model runs un-meshed and on the
+single-pod (data, model) and multi-pod (pod, data, model) meshes unchanged.
+
+Physical binding used by launch/:
+  batch -> (pod, data) | (data,)     seq -> (data,) when SP is on
+  model -> (model,)                  fsdp -> (data,) for >=27B params
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Rules:
+    batch: Tuple[str, ...] = ()
+    model: Tuple[str, ...] = ()
+    seq: Tuple[str, ...] = ()
+    fsdp: Tuple[str, ...] = ()
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        axes = getattr(self, logical)
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+
+_ACTIVE: Optional[Rules] = None
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, rules
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE
+
+
+def make_rules(mesh: jax.sharding.Mesh | None, *, sp: bool = False,
+               fsdp: bool = False, policy: str = "tp") -> Rules:
+    """policy="tp": model axis does tensor parallelism (default).
+    policy="dp": the model axis joins the batch axes -- pure data parallelism
+    for models small enough to replicate (section Perf: qwen3-0.6b)."""
+    if mesh is None:
+        return Rules()
+    names = mesh.axis_names
+    if policy == "dp":
+        return Rules(
+            batch=tuple(a for a in ("pod", "data", "model") if a in names),
+            model=(),
+            seq=(),
+            fsdp=("data",) if (fsdp and "data" in names) else (),
+        )
+    return Rules(
+        batch=tuple(a for a in ("pod", "data") if a in names),
+        model=tuple(a for a in ("model",) if a in names),
+        seq=("data",) if (sp and "data" in names) else (),
+        fsdp=("data",) if (fsdp and "data" in names) else (),
+    )
+
+
+def shard(x, *logical):
+    """Constrain with logical axes ("batch"/"model"/"seq"/None per dim)."""
+    if _ACTIVE is None:
+        return x
+    spec = P(*(_ACTIVE.resolve(a) for a in logical))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def bind_pspec(spec: P, rules: Rules) -> P:
+    """Bind a *logical* parameter PartitionSpec ("model"/"fsdp" entries) to
+    physical axes; drops axes the mesh doesn't have."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        phys = []
+        for e in entries:
+            r = rules.resolve(e) if e in ("model", "fsdp", "batch", "seq") else e
+            if r is None:
+                continue
+            phys.extend(r if isinstance(r, tuple) else (r,))
+        out.append(tuple(phys) if len(phys) > 1 else (phys[0] if phys else None))
+    return P(*out)

@@ -1,0 +1,138 @@
+"""Mamba2 (SSD) block -- scalar-per-head decay through the shared GLA engine.
+
+Faithful structure: fused in_proj -> [z | xBC | dt]; causal depthwise conv
+(k=4) on xBC; per-head decay a_t = exp(-softplus(dt + bias) * exp(A_log));
+y = C^T h with h the gated state; D skip; gated RMSNorm; out_proj.
+n_groups = 1 (B/C shared across heads), headdim 64 -- the zamba2-2.7b layout.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from .gla import chunked_gla, gla_decode_step
+from .layers import Maker, Params, rms_norm
+
+CONV_K = 4
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray    # (B, H, N, hd)
+    conv: jnp.ndarray   # (B, CONV_K-1, d_conv_channels)
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    heads = cfg.ssm_heads or d_inner // 64
+    hd = d_inner // heads
+    n = cfg.ssm_state
+    return d_inner, heads, hd, n
+
+
+def init_mamba(mk: Maker, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_inner, heads, hd, n = _dims(cfg)
+    d_conv = d_inner + 2 * n
+    return {
+        "in_proj": mk.param((d, 2 * d_inner + 2 * n + heads), P(None, "model")),
+        "conv_w": mk.param((CONV_K, d_conv), P(None, "model"), scale=CONV_K ** -0.5),
+        "conv_b": mk.zeros((d_conv,), P("model")),
+        "a_log": mk.param((heads,), P("model"), scale=1.0),
+        "dt_bias": mk.param((heads,), P("model"), scale=1.0),
+        "d_skip": mk.param((heads,), P("model"), scale=1.0),
+        "norm": mk.zeros((d_inner,), P("model")),
+        "out_proj": mk.param((d_inner, d), P("model", None)),
+    }
+
+
+def _split(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    d_inner, heads, hd, n = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _conv_train(p: Params, xbc: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv as a sum of shifted scalings (k=4)."""
+    acc = p["conv_b"] + xbc * p["conv_w"][CONV_K - 1]
+    for i in range(1, CONV_K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        acc = acc + shifted * p["conv_w"][CONV_K - 1 - i]
+    return jax.nn.silu(acc)
+
+
+def apply_mamba(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                chunk: int = 64) -> jnp.ndarray:
+    b, s, _ = x.shape
+    d_inner, heads, hd, n = _dims(cfg)
+    z, xbc, dt = _split(cfg, jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    xbc = _conv_train(p, xbc)
+    xin = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner: d_inner + n]
+    cmat = xbc[..., d_inner + n:]
+
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    log_decay = (-dt_act * jnp.exp(p["a_log"].astype(jnp.float32)))[..., None]  # (B,S,H,1)
+
+    v = xin.reshape(b, s, heads, hd) * dt_act[..., None].astype(xin.dtype)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, heads, n))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, heads, n))
+
+    y, _ = chunked_gla(q, k, v, log_decay, mode="mamba", chunk=chunk)
+    y = y + xin.reshape(b, s, heads, hd) * p["d_skip"].astype(y.dtype)[:, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ArchConfig, batch: int, n_layers: int,
+                     abstract: bool = False, dtype=jnp.float32) -> MambaState:
+    d_inner, heads, hd, n = _dims(cfg)
+    shapes = ((n_layers, batch, heads, n, hd),
+              (n_layers, batch, CONV_K - 1, d_inner + 2 * n))
+    if abstract:
+        return MambaState(*(jax.ShapeDtypeStruct(s, dtype) for s in shapes))
+    return MambaState(*(jnp.zeros(s, dtype) for s in shapes))
+
+
+def mamba_decode_step(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                      state: MambaState) -> tuple[jnp.ndarray, MambaState]:
+    """x: (B, 1, D)."""
+    b = x.shape[0]
+    d_inner, heads, hd, n = _dims(cfg)
+    z, xbc, dt = _split(cfg, jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    xbc = xbc[:, 0]  # (B, C_conv)
+    # conv with carried last K-1 inputs
+    hist = jnp.concatenate([state.conv, xbc[:, None]], axis=1)  # (B, K, C)
+    out = p["conv_b"] + jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                                   p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(out).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xin = xbc_c[..., :d_inner]
+    bmat = xbc_c[..., d_inner: d_inner + n]
+    cmat = xbc_c[..., d_inner + n:]
+    dt_act = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    log_decay = (-dt_act * jnp.exp(p["a_log"].astype(jnp.float32)))[..., None]  # (B,H,1)
+
+    v = xin.reshape(b, heads, hd) * dt_act[..., None].astype(xin.dtype)
+    k = jnp.broadcast_to(bmat[:, None, :], (b, heads, n))
+    q = jnp.broadcast_to(cmat[:, None, :], (b, heads, n))
+    y, new_ssm = gla_decode_step(q, k, v, log_decay, state.ssm.astype(jnp.float32),
+                                 mode="mamba")
+    y = y + xin.reshape(b, heads, hd) * p["d_skip"].astype(y.dtype)[:, None]
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, MambaState(new_ssm.astype(state.ssm.dtype), new_conv.astype(state.conv.dtype))

@@ -1,0 +1,534 @@
+"""Composable decoder/encoder stacks covering all ten assigned architectures.
+
+Layer weights are *stacked over scan groups*: the layer pattern (gemma3's
+5 local : 1 global, llama4's dense/MoE interleave, zamba2's 6-mamba +
+shared-attention period) defines a group; ``lax.scan`` iterates groups so the
+HLO contains a single group body regardless of depth (compile time matters:
+this container has one CPU core, and the dry-run compiles 40 cells x 2
+meshes).  Layers that don't fill a whole group are unrolled as "rest"
+(gemma3: 5 groups of 6 + 4 remainder).
+
+Entry points (functional; params are plain dict pytrees):
+  init_model(cfg, key, abstract)        -> (params, logical pspecs)
+  train_loss(params, cfg, batch)        -> scalar loss, metrics
+  prefill(params, cfg, batch)           -> last-pos hidden/logits + DecodeState
+  decode_step(params, cfg, token, st)   -> logits, new DecodeState
+  decode_state_specs(cfg, batch, seq)   -> abstract DecodeState (dry-run)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import (Maker, Params, StackedMaker, apply_mlp_block, embed,
+                     init_embed, init_mlp_block, logits, rms_norm, unzip)
+from .sharding_rules import shard
+
+VLM_EMBED_DIM = 1024  # CLIP-large patch width (anyres frontend stub)
+
+
+@dataclasses.dataclass(frozen=True)
+class Knobs:
+    """Performance knobs (hillclimbed in EXPERIMENTS.md section Perf)."""
+
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    gla_chunk: int = 64
+    rwkv_chunk: int = 32
+    gla_pair_bf16: bool = False
+    aux_coef: float = 0.01
+
+
+def _attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    """cfg for zamba2's shared full-attention block."""
+    return dataclasses.replace(cfg, block_type="attn", moe=None, mlp="gelu_mlp")
+
+
+def _pattern_at(cfg: ArchConfig, j: int) -> str:
+    return cfg.attn_pattern[j % len(cfg.attn_pattern)]
+
+
+def _is_moe(cfg: ArchConfig, j: int) -> bool:
+    return cfg.moe is not None and (j % cfg.moe.period == cfg.moe.period - 1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(mk: Maker, cfg: ArchConfig, j: int, cross: bool = False) -> Params:
+    if cfg.block_type == "mamba2":
+        return {"ln": mk.zeros((cfg.d_model,), P(None)),
+                "mamba": ssm_mod.init_mamba(mk, cfg)}
+    if cfg.block_type == "rwkv6":
+        return {"ln1": mk.zeros((cfg.d_model,), P(None)),
+                "tm": rwkv_mod.init_rwkv_tm(mk, cfg),
+                "ln2": mk.zeros((cfg.d_model,), P(None)),
+                "cm": init_mlp_block(mk, cfg)}
+    lp: Params = {"ln1": mk.zeros((cfg.d_model,), P(None)),
+                  "attn": attn.init_attn(mk, cfg),
+                  "ln2": mk.zeros((cfg.d_model,), P(None))}
+    if cross:
+        lp["lnx"] = mk.zeros((cfg.d_model,), P(None))
+        lp["xattn"] = attn.init_attn(mk, cfg, cross=True)
+    if _is_moe(cfg, j):
+        lp["moe"] = moe_mod.init_moe(mk, cfg)
+    else:
+        lp["ffn"] = init_mlp_block(mk, cfg)
+    return lp
+
+
+def _init_stack(mk: Maker, cfg: ArchConfig, cross: bool = False,
+                n_layers: int | None = None) -> Params:
+    n_layers = n_layers if n_layers is not None else cfg.n_layers
+    g = cfg.group
+    n_groups, n_rest = n_layers // g, n_layers % g
+    smk = StackedMaker(mk, n_groups)
+    groups = {"layers": [_init_layer(smk, cfg, j, cross) for j in range(g)]} \
+        if n_groups else {"layers": []}
+    rest = [_init_layer(mk, cfg, n_groups * g + r, cross) for r in range(n_rest)]
+    return {"groups": groups, "rest": rest}
+
+
+def init_model(cfg: ArchConfig, key: jax.Array | None = None,
+               abstract: bool = False) -> Tuple[Params, Params]:
+    """Returns (params, logical pspecs) -- structurally aligned pytrees."""
+    if key is None:
+        if not abstract:
+            raise ValueError("concrete init needs a PRNG key")
+        key = jax.random.PRNGKey(0)
+    mk = Maker(key, jnp.dtype(cfg.dtype), abstract)
+    tree: Dict[str, Any] = {
+        "embed": init_embed(mk, cfg),
+        "final_norm": mk.zeros((cfg.d_model,), P(None)),
+        "stack": _init_stack(mk, cfg, cross=cfg.encoder is not None),
+    }
+    if cfg.hybrid_shared_attn_every:
+        tree["shared"] = _init_layer(mk, _attn_cfg(cfg), 0)
+    if cfg.encoder is not None:
+        tree["enc_stack"] = _init_stack(mk, cfg, n_layers=cfg.encoder.n_layers)
+        tree["enc_norm"] = mk.zeros((cfg.d_model,), P(None))
+    if cfg.vlm_image_tokens:
+        tree["projector"] = {
+            "w1": mk.param((VLM_EMBED_DIM, cfg.d_model), P(None, "model")),
+            "w2": mk.param((cfg.d_model, cfg.d_model), P("model", None)),
+        }
+    return unzip(tree)
+
+
+# ---------------------------------------------------------------------------
+# sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _sublayer_seq(lp: Params, cfg: ArchConfig, x: jnp.ndarray, j: int,
+                  knobs: Knobs, *, causal: bool = True,
+                  enc_out: jnp.ndarray | None = None,
+                  collect_kv: bool = False):
+    """One layer.  Returns (x, kv, xkv, aux); kv/xkv None unless collected."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block_type == "mamba2":
+        x = x + ssm_mod.apply_mamba(lp["mamba"], cfg, rms_norm(x, lp["ln"]),
+                                    chunk=knobs.gla_chunk)
+        return x, None, None, aux
+    if cfg.block_type == "rwkv6":
+        x = x + rwkv_mod.apply_rwkv_tm(lp["tm"], cfg, rms_norm(x, lp["ln1"]),
+                                       chunk=knobs.rwkv_chunk,
+                                       pair_bf16=knobs.gla_pair_bf16)
+        x = x + apply_mlp_block(lp["cm"], cfg, rms_norm(x, lp["ln2"]))
+        return x, None, None, aux
+
+    # Megatron-SP: residuals are S-sharded between layers; gather the
+    # sequence ONCE on attention entry (chunked attention dynamic-slices
+    # along S, which would otherwise all-gather per chunk).  Skipped for
+    # hd-sharded attention: replicating h there turns the score contraction
+    # into per-chunk all-reduces (whisper/llama4 regressed 2-3x; section
+    # Perf 4.4) -- GSPMD's propagated sharding is better for that family.
+    h = rms_norm(x, lp["ln1"])
+    if not attn.q_hd_sharded(cfg):
+        h = shard(h, "batch", None, None)
+    if causal:
+        window = cfg.window if _pattern_at(cfg, j) == "local" else None
+        a_out, akv = attn.blocked_attention(lp["attn"], cfg, h, window=window,
+                                            q_chunk=knobs.q_chunk,
+                                            kv_chunk=knobs.kv_chunk)
+    else:
+        a_out, akv = attn.full_attention(lp["attn"], cfg, h, causal=False)
+    x = x + a_out
+    xkv = None
+    if "xattn" in lp and enc_out is not None:
+        c_out, xkv = attn.full_attention(lp["xattn"], cfg, rms_norm(x, lp["lnx"]),
+                                         causal=False, kv_x=enc_out,
+                                         use_rope=False)
+        x = x + c_out
+    h = rms_norm(x, lp["ln2"])
+    if "moe" in lp:
+        # batch-align the dispatch input here: S-sharded residuals hitting
+        # the grouped dispatch otherwise reshard via per-layer all-to-alls
+        h = shard(h, "batch", None, None)
+        f_out, aux = moe_mod.apply_moe(lp["moe"], cfg, h)
+    else:
+        f_out = apply_mlp_block(lp["ffn"], cfg, h)
+    x = x + f_out
+    return x, (akv if collect_kv else None), (xkv if collect_kv else None), aux
+
+
+def _stack_seq(stack: Params, cfg: ArchConfig, x: jnp.ndarray, knobs: Knobs,
+               *, causal: bool = True, enc_out: jnp.ndarray | None = None,
+               shared: Params | None = None, collect_kv: bool = False):
+    """Scan over groups + unrolled rest.
+
+    Returns (x, aux, collected) with collected = dict of stacked kv pytrees
+    (group axis leading) or None."""
+    g = cfg.group
+    shared_cfg = _attn_cfg(cfg) if shared is not None else None
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        kvs, xkvs = [], []
+        for j in range(g):
+            x, kv, xkv, a = _sublayer_seq(gparams["layers"][j], cfg, x, j, knobs,
+                                          causal=causal, enc_out=enc_out,
+                                          collect_kv=collect_kv)
+            aux = aux + a
+            if collect_kv:
+                kvs.append(kv)
+                xkvs.append(xkv)
+        skv = None
+        if shared is not None:
+            x, skv, _, a = _sublayer_seq(shared, shared_cfg, x, 0, knobs,
+                                         causal=causal, collect_kv=collect_kv)
+            aux = aux + a
+        # Megatron-SP residuals: the group-boundary activation (what remat
+        # saves) is sequence-sharded over the model axis; attention/matmul
+        # all-gather it on entry, norms/pointwise stay local.
+        x = shard(x, "batch", "model", None)
+        ys = (tuple(kvs), tuple(xkvs), skv) if collect_kv else None
+        return (x, aux), ys
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    aux = jnp.zeros((), jnp.float32)
+    grouped = None
+    if stack["groups"]["layers"]:
+        (x, aux), grouped = jax.lax.scan(body, (x, aux), stack["groups"])
+
+    rest_kvs, rest_xkvs = [], []
+    n_groups = len(stack["rest"]) and (cfg.n_layers // g)
+    for r, lp in enumerate(stack["rest"]):
+        x, kv, xkv, a = _sublayer_seq(lp, cfg, x, (cfg.n_layers // g) * g + r,
+                                      knobs, causal=causal, enc_out=enc_out,
+                                      collect_kv=collect_kv)
+        aux = aux + a
+        if collect_kv:
+            rest_kvs.append(kv)
+            rest_xkvs.append(xkv)
+    collected = None
+    if collect_kv:
+        collected = {"grouped": grouped, "rest": tuple(rest_kvs),
+                     "rest_x": tuple(rest_xkvs)}
+    return x, aux, collected
+
+
+def _fuse_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+                 knobs: Knobs):
+    """Frontend fusion; returns (x, enc_out, n_prefix)."""
+    enc_out = None
+    n_prefix = 0
+    if cfg.encoder is not None:
+        e = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        e, _, _ = _stack_seq(params["enc_stack"], cfg, e, knobs, causal=False)
+        enc_out = rms_norm(e, params["enc_norm"])
+    x = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.vlm_image_tokens:
+        pj = params["projector"]
+        img = jax.nn.gelu(batch["image_embeds"].astype(x.dtype) @ pj["w1"],
+                          approximate=True) @ pj["w2"]
+        x = jnp.concatenate([img, x], axis=1)
+        n_prefix = cfg.vlm_image_tokens
+    return x, enc_out, n_prefix
+
+
+def forward_seq(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+                knobs: Knobs = Knobs(), collect_kv: bool = False):
+    x, enc_out, n_prefix = _fuse_inputs(params, cfg, batch, knobs)
+    x = shard(x, "batch", None, None)
+    shared = params.get("shared") if cfg.hybrid_shared_attn_every else None
+    x, aux, collected = _stack_seq(params["stack"], cfg, x, knobs, causal=True,
+                                   enc_out=enc_out, shared=shared,
+                                   collect_kv=collect_kv)
+    x = rms_norm(x, params["final_norm"])
+    return x, aux, n_prefix, collected
+
+
+CE_CHUNK = 512
+
+
+def _ce_of_chunk(params, cfg, xc, tc):
+    """Sum of (lse - picked) over one sequence chunk; logits never outlive
+    the chunk (fused-CE pattern; cuts the f32 (B,S,V) buffer ~S/chunk-fold)."""
+    lg = logits(params["embed"], xc, cfg).astype(jnp.float32)
+    lg = shard(lg, "batch", None, "model")
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays sharded over the
+    # model-parallel vocab axis (gather would all-gather the logits)
+    hot = jax.nn.one_hot(tc, lg.shape[-1], dtype=lg.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", lg, hot)
+    return jnp.sum(lse - picked)
+
+
+def train_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+               knobs: Knobs = Knobs()):
+    x, aux, n_prefix, _ = forward_seq(params, cfg, batch, knobs)
+    tokens = batch["tokens"]
+    if n_prefix:
+        x = x[:, n_prefix:]
+    x = x[:, :-1]
+    tgt = tokens[:, 1:]
+    n_pos = x.shape[0] * x.shape[1]
+    s = x.shape[1]
+    if s % CE_CHUNK == 0 and s > CE_CHUNK:
+        nc = s // CE_CHUNK
+        xb = jnp.moveaxis(x.reshape(x.shape[0], nc, CE_CHUNK, -1), 1, 0)
+        tb = jnp.moveaxis(tgt.reshape(tgt.shape[0], nc, CE_CHUNK), 1, 0)
+
+        def chunk_body(tot, inp):
+            xc, tc = inp
+            return tot + _ce_of_chunk(params, cfg, xc, tc), None
+
+        body = jax.checkpoint(chunk_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        ce_sum, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xb, tb))
+    else:
+        ce_sum = _ce_of_chunk(params, cfg, x, tgt)
+    ce = ce_sum / n_pos
+    loss = ce + knobs.aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ArchConfig, batch: int, seq: int,
+                       abstract: bool = True) -> Dict[str, Any]:
+    st: Dict[str, Any] = {"pos": jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                          else jnp.asarray(seq - 1, jnp.int32)}
+    kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.dtype(cfg.dtype)
+    if cfg.block_type == "attn":
+        st["kv"] = attn.init_kv_cache(cfg, batch, seq, cfg.n_layers, abstract, kv_dtype)
+    if cfg.block_type == "mamba2":
+        st["mamba"] = ssm_mod.init_mamba_state(cfg, batch, cfg.n_layers, abstract)
+    if cfg.block_type == "rwkv6":
+        st["rwkv"] = rwkv_mod.init_rwkv_state(cfg, batch, cfg.n_layers, abstract)
+    if cfg.hybrid_shared_attn_every:
+        n_apps = cfg.n_layers // cfg.group
+        st["shared_kv"] = attn.init_kv_cache(_attn_cfg(cfg), batch, seq, n_apps,
+                                             abstract, kv_dtype)
+    if cfg.encoder is not None:
+        st["cross_kv"] = attn.init_kv_cache(cfg, batch, cfg.encoder.seq,
+                                            cfg.n_layers, abstract, kv_dtype)
+    return st
+
+
+_STATE_KEYS = ("kv", "mamba", "rwkv", "cross_kv")  # per-layer-stacked entries
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _sublayer_decode(lp: Params, cfg: ArchConfig, x, j: int,
+                     sl: Dict[str, tuple], pos, knobs: Knobs):
+    """sl: per-layer state slices.  Returns (x, new slices)."""
+    new = dict(sl)
+    if cfg.block_type == "mamba2":
+        out, ms = ssm_mod.mamba_decode_step(lp["mamba"], cfg,
+                                            rms_norm(x, lp["ln"]),
+                                            ssm_mod.MambaState(*sl["mamba"]))
+        new["mamba"] = tuple(ms)
+        return x + out, new
+    if cfg.block_type == "rwkv6":
+        h = rms_norm(x, lp["ln1"])
+        out, wkv, _ = rwkv_mod.rwkv_tm_decode_step(lp["tm"], cfg, h,
+                                                   sl["rwkv"][0], sl["rwkv"][1])
+        x = x + out
+        h2 = rms_norm(x, lp["ln2"])
+        cm_out = apply_mlp_block(lp["cm"], cfg, h2, x_prev=sl["rwkv"][2])
+        new["rwkv"] = (wkv, h, h2)
+        return x + cm_out, new
+    window = cfg.window if _pattern_at(cfg, j) == "local" else None
+    out, cache = attn.decode_attention(lp["attn"], cfg, rms_norm(x, lp["ln1"]),
+                                       attn.KVCache(*sl["kv"]), pos,
+                                       window=window)
+    new["kv"] = tuple(cache)
+    x = x + out
+    if "xattn" in lp and "cross_kv" in sl:
+        cout, _ = attn.decode_attention(lp["xattn"], cfg, rms_norm(x, lp["lnx"]),
+                                        attn.KVCache(*sl["cross_kv"]), pos,
+                                        window=None, cross=True)
+        x = x + cout
+    h = rms_norm(x, lp["ln2"])
+    f_out = (moe_mod.apply_moe(lp["moe"], cfg, h)[0] if "moe" in lp
+             else apply_mlp_block(lp["ffn"], cfg, h))
+    return x + f_out, new
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
+                st: Dict[str, Any], knobs: Knobs = Knobs()):
+    """token: (B, 1) int32.  Returns (logits (B, V), new state)."""
+    pos = st["pos"]
+    x = embed(params["embed"], token, cfg)
+    x = shard(x, "batch", None, None)
+    g = cfg.group
+    n_groups, n_rest = cfg.n_layers // g, cfg.n_layers % g
+    present = [k for k in _STATE_KEYS if k in st]
+
+    def group_slices(st):
+        out = {}
+        for k in present:
+            out[k] = tuple(l[: n_groups * g].reshape((n_groups, g) + l.shape[1:])
+                           for l in st[k])
+        return out
+
+    gstate = group_slices(st)
+    shared = params.get("shared") if cfg.hybrid_shared_attn_every else None
+    has_shared = "shared_kv" in st
+
+    def group_body(x, xs):
+        gparams, sl, skv = xs
+        new_per_layer = []
+        for j in range(g):
+            slj = {k: tuple(l[j] for l in sl[k]) for k in present}
+            x, nsl = _sublayer_decode(gparams["layers"][j], cfg, x, j, slj,
+                                      pos, knobs)
+            new_per_layer.append(nsl)
+        ys = {k: tuple(jnp.stack([n[k][i] for n in new_per_layer])
+                       for i in range(len(sl[k]))) for k in present}
+        new_skv = skv
+        if shared is not None:
+            acfg = _attn_cfg(cfg)
+            out, cache = attn.decode_attention(shared["attn"], acfg,
+                                               rms_norm(x, shared["ln1"]),
+                                               attn.KVCache(*skv), pos,
+                                               window=None)
+            x = x + out
+            x = x + apply_mlp_block(shared["ffn"], acfg,
+                                    rms_norm(x, shared["ln2"]))
+            new_skv = tuple(cache)
+        return x, (ys, new_skv)
+
+    skv_xs = (tuple(st["shared_kv"]) if has_shared
+              else (jnp.zeros((n_groups, 1)), jnp.zeros((n_groups, 1))))
+    x, (new_gstate, new_skv) = jax.lax.scan(
+        group_body, x, (params["stack"]["groups"], gstate, skv_xs))
+
+    # unrolled rest layers
+    rest_new: List[Dict[str, tuple]] = []
+    for r, lp in enumerate(params["stack"]["rest"]):
+        li = n_groups * g + r
+        slr = {k: tuple(l[li] for l in st[k]) for k in present}
+        x, nsl = _sublayer_decode(lp, cfg, x, li, slr, pos, knobs)
+        rest_new.append(nsl)
+
+    new_st = dict(st)
+    new_st["pos"] = pos + 1
+    for k in present:
+        merged = []
+        for i in range(len(st[k])):
+            flat = new_gstate[k][i].reshape((n_groups * g,) + new_gstate[k][i].shape[2:])
+            if n_rest:
+                tail = jnp.stack([rn[k][i] for rn in rest_new])
+                flat = jnp.concatenate([flat, tail], axis=0)
+            merged.append(flat.astype(st[k][i].dtype))
+        new_st[k] = type(st[k])(*merged) if hasattr(st[k], "_fields") else tuple(merged)
+    if has_shared:
+        new_st["shared_kv"] = attn.KVCache(*(s.astype(c.dtype) for s, c in
+                                             zip(new_skv, st["shared_kv"])))
+
+    x = rms_norm(x, params["final_norm"])
+    lg = logits(params["embed"], x, cfg)[:, 0]
+    return lg, new_st
+
+
+# ---------------------------------------------------------------------------
+# prefill (attention-cache architectures)
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            knobs: Knobs = Knobs(), pad_to: int | None = None):
+    """Full-sequence forward that also builds the decode caches.
+
+    ``pad_to`` sets the ring-buffer capacity (must exceed the prompt length
+    by the number of tokens to be generated, or the ring evicts the oldest
+    entries -- which is the intended streaming behavior at capacity).
+
+    Supported for attention-backbone archs (incl. whisper cross-attention);
+    mamba/rwkv per-token states are *not* assembled here -- SSM-family
+    serving warms up via step-wise decode, see examples/serve_lm.py.
+    Returns (last-position logits, DecodeState).
+    """
+    x, aux, n_prefix, collected = forward_seq(params, cfg, batch, knobs,
+                                              collect_kv=True)
+    lg = logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    seq = x.shape[1]
+    cap = pad_to or seq
+    assert cap >= seq, (cap, seq)
+
+    def pad_cache(c: attn.KVCache) -> attn.KVCache:
+        if cap == seq:
+            return c
+        pad = ((0, 0), (0, 0), (0, cap - seq), (0, 0), (0, 0))
+        return attn.KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad))
+
+    st: Dict[str, Any] = {"pos": jnp.asarray(seq, jnp.int32)}
+    if cfg.block_type != "attn":
+        return lg, st  # SSM-family: no kv cache to assemble
+
+    def assemble(grouped_idx, rest_list):
+        """grouped ys: tuple over j of (k,v) with leading group axis."""
+        ks, vs = [], []
+        if collected["grouped"] is not None:
+            per_j = collected["grouped"][grouped_idx]
+            for j_entry in per_j:
+                if j_entry is None:
+                    continue
+                k, v = j_entry  # (n_groups, B, S, kvh, hd)
+                ks.append(k)
+                vs.append(v)
+            if ks:
+                # interleave j within groups: (n_groups, j, ...) -> (L, ...)
+                k = jnp.stack(ks, axis=1).reshape((-1,) + ks[0].shape[1:])
+                v = jnp.stack(vs, axis=1).reshape((-1,) + vs[0].shape[1:])
+                ks, vs = [k], [v]
+        for entry in rest_list:
+            if entry is None:
+                continue
+            k, v = entry
+            ks.append(k[None])
+            vs.append(v[None])
+        if not ks:
+            return None
+        return attn.KVCache(jnp.concatenate(ks, 0), jnp.concatenate(vs, 0))
+
+    kv = assemble(0, collected["rest"])
+    if kv is not None:
+        st["kv"] = pad_cache(kv)
+    if cfg.encoder is not None:
+        xkv = assemble(1, collected["rest_x"])
+        if xkv is not None:
+            st["cross_kv"] = xkv  # fixed encoder length; never ring-written
+    if cfg.hybrid_shared_attn_every and collected["grouped"] is not None:
+        skv = collected["grouped"][2]
+        if skv is not None:
+            st["shared_kv"] = pad_cache(attn.KVCache(*skv))
+    return lg, st

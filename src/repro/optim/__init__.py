@@ -1,0 +1,4 @@
+"""Optimizers: Adam/AdamW (sharded states) and strong-Wolfe L-BFGS."""
+
+from .adam import AdamState, adam_abstract, adam_init, adam_update
+from .lbfgs import LBFGSResult, lbfgs

@@ -1,0 +1,4 @@
+"""Distribution utilities: gradient compression, elastic helpers."""
+
+from .compression import (compressed_psum_tree, dequantize_int8, ef_compress,
+                          ef_init, quantize_int8)

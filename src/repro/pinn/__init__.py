@@ -1,0 +1,6 @@
+"""PINN training framework: self-similar Burgers profiles (paper section IV-C)."""
+
+from .burgers import (exact_profile, lambda_window, profile_lambda,
+                      residual_derivs_autodiff, residual_jet, smoothness_order)
+from .losses import LossWeights, pinn_loss
+from .trainer import PINNResult, PINNRunConfig, train

@@ -1,0 +1,75 @@
+"""PINN loss assembly: residual MSE + Sobolev terms + high-order origin
+smoothness + boundary conditions (paper eq. 1, 2 and appendix A)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jet as J
+from repro.core.ntp import MLPParams, mlp_apply
+
+from .burgers import exact_profile, residual_derivs_autodiff, residual_jet
+
+
+@dataclass(frozen=True)
+class LossWeights:
+    residual: float = 1.0
+    sobolev1: float = 0.1     # Q_1 of the Sobolev loss (paper eq. 2, m=1)
+    origin: float = 1.0e-3    # high-order smoothness at the origin (L*)
+    bc: float = 10.0
+
+
+def bc_targets(k: int, domain: float) -> Tuple[float, float]:
+    """U_true(+-L) with the C=1 normalization."""
+    import numpy as np
+    vals = exact_profile(np.array([-domain, domain]), k)
+    return float(vals[0]), float(vals[1])
+
+
+def pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
+              pts: jnp.ndarray, origin_pts: jnp.ndarray, domain: float,
+              order: int, weights: LossWeights, lam_window: Tuple[float, float],
+              engine: str = "ntp", impl: str = "jnp",
+              bc_vals: Tuple[float, float] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full PINN objective.  ``engine``: "ntp" (quasilinear, ours) or
+    "autodiff" (the paper's baseline).  Everything else is identical, so the
+    benchmark isolates the derivative engine."""
+    lo, hi = lam_window
+    lam = lo + (hi - lo) * jax.nn.sigmoid(lam_raw)
+
+    if engine == "ntp":
+        # one jet to order 1 on the full domain (residual + Sobolev-1) ...
+        r_dom = J.derivatives(residual_jet(params, lam, pts, 1, impl=impl))
+        # ... and one high-order jet on the origin cluster
+        r_org = J.derivatives(residual_jet(params, lam, origin_pts, order, impl=impl))
+    else:
+        r_dom = residual_derivs_autodiff(params, lam, pts, 1)
+        r_org = residual_derivs_autodiff(params, lam, origin_pts, order)
+
+    l_res = jnp.mean(r_dom[0] ** 2)
+    l_sob = jnp.mean(r_dom[1] ** 2)
+    l_org = jnp.mean(r_org[order] ** 2)
+
+    # boundary conditions: U(0)=0, U'(0)=-1, U(+-L) pinned to the C=1 profile
+    x0 = jnp.zeros((1, 1), pts.dtype)
+    u0j = J.derivatives(residual_jet_u(params, x0, impl=impl))
+    u0, du0 = u0j[0, 0, 0], u0j[1, 0, 0]
+    xb = jnp.asarray([[-domain], [domain]], pts.dtype)
+    ub = mlp_apply(params, xb)
+    tb = jnp.asarray(bc_vals, pts.dtype)
+    l_bc = u0 ** 2 + (du0 + 1.0) ** 2 + jnp.mean((ub[:, 0] - tb) ** 2)
+
+    loss = (weights.residual * l_res + weights.sobolev1 * l_sob +
+            weights.origin * l_org + weights.bc * l_bc)
+    return loss, {"residual": l_res, "sobolev1": l_sob, "origin": l_org,
+                  "bc": l_bc, "lambda": lam}
+
+
+def residual_jet_u(params: MLPParams, x: jnp.ndarray, impl: str = "jnp") -> J.Jet:
+    """Order-1 jet of U itself (for the U(0), U'(0) boundary terms)."""
+    from repro.core.ntp import ntp_forward
+    return ntp_forward(params, x, 1, impl=impl)

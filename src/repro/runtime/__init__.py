@@ -1,0 +1,2 @@
+from .pipeline import gpipe, pipeline_bubble_fraction
+from .trainer import Trainer, TrainerConfig, TrainerReport

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# PINN / core-jet precision tests need f64; smoke tests pass f32 explicitly.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,59 @@
+"""The HLO static analyzer: trip counts, dot FLOPs, collective parsing."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_static import analyze, parse_computations, while_trip_count
+
+
+def _opt_hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    t = analyze(_opt_hlo(lambda a, b: a @ b, a, b))
+    assert t.flops == 2 * 128 * 256 * 64
+
+
+def test_scan_multiplies_flops():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(a):
+        def body(x, _):
+            return x @ a, None
+        x, _ = jax.lax.scan(body, a, None, length=17)
+        return x
+
+    t = analyze(_opt_hlo(f, a))
+    assert t.flops == 17 * 2 * 64 * 64 * 64
+
+
+def test_nested_scan_multiplies():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def f(a):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ a, None
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return y, None
+        x, _ = jax.lax.scan(outer, a, None, length=3)
+        return x
+
+    t = analyze(_opt_hlo(f, a))
+    assert t.flops == 15 * 2 * 32 ** 3
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 16, 32), jnp.float32)
+    b = jnp.zeros((4, 32, 8), jnp.float32)
+    t = analyze(_opt_hlo(lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b))
+    assert t.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_bytes_nonzero_and_finite():
+    a = jnp.zeros((256, 256), jnp.float32)
+    t = analyze(_opt_hlo(lambda a: (a @ a).sum(), a))
+    assert t.bytes > 256 * 256 * 4  # at least reads the input

@@ -1,0 +1,198 @@
+"""Jet algebra: property tests against nested autodiff + analytic series."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import jet as J
+
+
+def ref_derivs(fn, x0, v, order):
+    """Directional derivatives of fn along v via nested jacfwd."""
+    g = lambda t: fn(x0 + t * v)
+    outs = []
+    for k in range(order + 1):
+        outs.append(g(0.0))
+        g = jax.jacfwd(g)
+    return outs
+
+
+def seeded(x0, v, order):
+    return J.seed(x0, v, order)
+
+
+X0 = jnp.asarray([[0.3, -0.7, 1.2], [0.9, 0.1, -0.4]], jnp.float64)
+V = jnp.asarray([[1.0, -0.5, 0.25], [0.2, 0.8, -1.0]], jnp.float64)
+
+
+@pytest.mark.parametrize("name,jet_fn,ref_fn", [
+    ("tanh", J.tanh, jnp.tanh),
+    ("sigmoid", J.sigmoid, jax.nn.sigmoid),
+    ("sin", J.sin, jnp.sin),
+    ("softplus", J.softplus, jax.nn.softplus),
+    ("exp", J.exp, jnp.exp),
+    ("silu", J.silu, jax.nn.silu),
+    ("gelu", J.gelu, lambda x: jax.nn.gelu(x, approximate=True)),
+])
+def test_scalar_functions_to_order_6(name, jet_fn, ref_fn):
+    order = 6
+    out = J.derivatives(jet_fn(seeded(X0, V, order)))
+    refs = ref_derivs(ref_fn, X0, V, order)
+    for k in range(order + 1):
+        np.testing.assert_allclose(out[k], refs[k], rtol=1e-8, atol=1e-8,
+                                   err_msg=f"{name} order {k}")
+
+
+@pytest.mark.parametrize("name,jet_fn,ref_fn", [
+    ("log", J.log, jnp.log),
+    ("sqrt", J.sqrt, jnp.sqrt),
+    ("rsqrt", J.rsqrt, jax.lax.rsqrt),
+    ("recip", lambda a: J.div(1.0, a), lambda x: 1.0 / x),
+])
+def test_positive_domain_functions(name, jet_fn, ref_fn):
+    x0 = jnp.abs(X0) + 1.5
+    order = 5
+    out = J.derivatives(jet_fn(seeded(x0, V, order)))
+    refs = ref_derivs(ref_fn, x0, V, order)
+    for k in range(order + 1):
+        np.testing.assert_allclose(out[k], refs[k], rtol=1e-7, atol=1e-9,
+                                   err_msg=f"{name} order {k}")
+
+
+@given(st.integers(1, 7))
+@settings(max_examples=7, deadline=None)
+def test_mul_is_cauchy_convolution(order):
+    a = seeded(X0, V, order)
+    b = J.sin(a)
+    prod = J.mul(a, b)
+    refs = ref_derivs(lambda x: x * jnp.sin(x), X0, V, order)
+    out = J.derivatives(prod)
+    for k in range(order + 1):
+        np.testing.assert_allclose(out[k], refs[k], rtol=1e-8, atol=1e-10)
+
+
+def test_exp_log_roundtrip():
+    a = seeded(jnp.abs(X0) + 0.5, V, 6)
+    back = J.log(J.exp(a))
+    np.testing.assert_allclose(back.coeffs, a.coeffs, rtol=1e-9, atol=1e-9)
+
+
+def test_div_mul_roundtrip():
+    a = seeded(X0, V, 6)
+    b = seeded(jnp.abs(X0) + 1.0, -V, 6)
+    np.testing.assert_allclose(J.mul(J.div(a, b), b).coeffs, a.coeffs,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_softmax_jet_matches_jacfwd():
+    order = 4
+    out = J.derivatives(J.softmax(seeded(X0, V, order), axis=-1))
+    refs = ref_derivs(lambda x: jax.nn.softmax(x, -1), X0, V, order)
+    for k in range(order + 1):
+        np.testing.assert_allclose(out[k], refs[k], rtol=1e-7, atol=1e-10)
+
+
+def test_attention_block_jet_matches_jacfwd():
+    d = 6
+    key = jax.random.PRNGKey(7)
+    wq, wk, wv = (jax.random.normal(jax.random.fold_in(key, i), (d, d),
+                                    jnp.float64) * 0.4 for i in range(3))
+    x0 = jax.random.normal(jax.random.fold_in(key, 5), (2, 5, d), jnp.float64)
+    v = jax.random.normal(jax.random.fold_in(key, 6), (2, 5, d), jnp.float64)
+
+    def ref(x):
+        q, k, val = x @ wq, x @ wk, x @ wv
+        p = jax.nn.softmax(jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(d), -1)
+        return jnp.einsum("bqk,bkd->bqd", p, val)
+
+    def jet_attn(j):
+        q, k, val = J.linear(j, wq), J.linear(j, wk), J.linear(j, wv)
+        s = J.scale(J.einsum("bqd,bkd->bqk", q, k), 1.0 / jnp.sqrt(d))
+        return J.einsum("bqk,bkd->bqd", J.softmax(s, -1), val)
+
+    order = 3
+    out = J.derivatives(jet_attn(J.seed(x0, v, order)))
+    refs = ref_derivs(ref, x0, v, order)
+    for k in range(order + 1):
+        np.testing.assert_allclose(out[k], refs[k], rtol=1e-7, atol=1e-10)
+
+
+def test_rms_and_layer_norm_jets():
+    gam = jnp.full((3,), 1.2, jnp.float64)
+    beta = jnp.full((3,), -0.1, jnp.float64)
+    order = 4
+
+    def rms_ref(x):
+        return x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * gam
+
+    def ln_ref(x):
+        mu = x.mean(-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(x.var(-1, keepdims=True) + 1e-5) * gam + beta
+
+    for jet_fn, ref_fn in ((lambda j: J.rms_norm(j, gam, offset=0.0), rms_ref),
+                           (lambda j: J.layer_norm(j, gam, beta), ln_ref)):
+        out = J.derivatives(jet_fn(seeded(X0, V, order)))
+        refs = ref_derivs(ref_fn, X0, V, order)
+        for k in range(order + 1):
+            np.testing.assert_allclose(out[k], refs[k], rtol=1e-6, atol=1e-9)
+
+
+@given(st.integers(0, 6))
+@settings(max_examples=7, deadline=None)
+def test_derivative_roundtrip(order):
+    j = seeded(X0, V, order)
+    back = J.from_derivatives(J.derivatives(j))
+    np.testing.assert_allclose(back.coeffs, j.coeffs, rtol=1e-12, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# algebraic ring/functional identities on random truncated series
+# ---------------------------------------------------------------------------
+
+def _random_jet(seed, order, shape=(3, 4)):
+    k = jax.random.PRNGKey(seed)
+    return J.Jet(jax.random.normal(k, (order + 1,) + shape, jnp.float64) * 0.5)
+
+
+@given(st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_mul_associative_and_commutative(order, seed):
+    a, b, c = (_random_jet(seed + i, order) for i in range(3))
+    ab_c = J.mul(J.mul(a, b), c)
+    a_bc = J.mul(a, J.mul(b, c))
+    np.testing.assert_allclose(ab_c.coeffs, a_bc.coeffs, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(J.mul(a, b).coeffs, J.mul(b, a).coeffs,
+                               rtol=1e-12, atol=0)
+
+
+@given(st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_mul_distributes_over_add(order, seed):
+    a, b, c = (_random_jet(seed + i, order) for i in range(3))
+    lhs = J.mul(a, J.add(b, c))
+    rhs = J.add(J.mul(a, b), J.mul(a, c))
+    np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-10, atol=1e-12)
+
+
+@given(st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_exp_is_a_homomorphism(order, seed):
+    a, b = (_random_jet(seed + i, order) for i in range(2))
+    lhs = J.exp(J.add(a, b))
+    rhs = J.mul(J.exp(a), J.exp(b))
+    np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-9, atol=1e-10)
+
+
+@given(st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_tanh_double_angle_identity(order, seed):
+    """tanh(2a) == 2 tanh(a) / (1 + tanh(a)^2): exercises compose + div + mul
+    together against an independent functional identity."""
+    a = _random_jet(seed, order)
+    lhs = J.tanh(J.scale(a, 2.0))
+    t = J.tanh(a)
+    rhs = J.div(J.scale(t, 2.0), J.add(J.mul(t, t), 1.0))
+    np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-8, atol=1e-10)

@@ -1,0 +1,88 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import jet as J
+from repro.kernels import ops, ref
+from repro.kernels.bell_tables import fdb_terms, tanh_poly_rows
+from repro.kernels.jet_dense import jet_dense_pallas
+from repro.kernels.tanh_jet import act_jet_pallas
+
+SHAPES = [(4, 24), (32, 130), (17, 257)]
+ORDERS = [1, 3, 6]
+DTYPES = [jnp.float32]  # bf16 covered once below (CPU wall-time budget)
+
+
+def _tol(dtype, order):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=5e-4, atol=10 ** -(6 - order // 3))
+
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_act_jet_sweep(order, shape, dtype):
+    b, w = shape
+    c = (jax.random.normal(jax.random.PRNGKey(order), (order + 1, b, w))
+         * 0.7).astype(dtype)
+    got = act_jet_pallas(c, "tanh", interpret=True)
+    want = ref.act_jet_ref(c.astype(jnp.float32), "tanh").astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype, order))
+
+
+@pytest.mark.parametrize("order", [1, 5])
+@pytest.mark.parametrize("dims", [(8, 24, 24), (3, 260, 129)])
+@pytest.mark.parametrize("activation", ["tanh", None])
+def test_jet_dense_sweep(order, dims, activation):
+    b, din, dout = dims
+    key = jax.random.PRNGKey(1)
+    c = jax.random.normal(key, (order + 1, b, din), jnp.float32) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (din, dout), jnp.float32) * 0.1
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (dout,), jnp.float32)
+    got = jet_dense_pallas(c, w, bias, activation, interpret=True)
+    want = ref.jet_dense_ref(c, w, bias, activation)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_bfloat16_path():
+    c = (jax.random.normal(jax.random.PRNGKey(9), (4, 16, 64)) * 0.7
+         ).astype(jnp.bfloat16)
+    got = act_jet_pallas(c, "tanh", interpret=True)
+    want = ref.act_jet_ref(c.astype(jnp.float32), "tanh")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_block_shapes_cover_non_divisible():
+    c = jax.random.normal(jax.random.PRNGKey(0), (3, 37, 291), jnp.float32)
+    got = act_jet_pallas(c, "tanh", block_b=16, block_w=128, interpret=True)
+    want = ref.act_jet_ref(c, "tanh")
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_ref_matches_core_jet_algebra():
+    """ref.py itself is validated against the independent core jet algebra."""
+    c = jax.random.normal(jax.random.PRNGKey(3), (6, 5, 11), jnp.float64)
+    want = J.compose(J.Jet(c), "tanh").coeffs
+    got = ref.act_jet_ref(c, "tanh")
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_sigmoid_kernel_path():
+    c = jax.random.normal(jax.random.PRNGKey(4), (4, 9, 33), jnp.float32)
+    got = ops.act_jet(c, "sigmoid")
+    want = ref.act_jet_ref(c, "sigmoid")
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_tables_are_static_and_exact():
+    rows = tanh_poly_rows(6)
+    assert rows[1][:3] == (1.0, 0.0, -1.0)  # tanh' = 1 - u^2
+    for k, terms in enumerate(fdb_terms(6), start=1):
+        assert all(isinstance(cf, float) for cf, _, _ in terms)
+        assert sum(cf for cf, _, _ in terms) == 2.0 ** (k - 1)

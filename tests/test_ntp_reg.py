@@ -1,0 +1,80 @@
+"""The jet-Sobolev LM regularizer: exactness of transformer jets vs jacfwd."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import jet as J
+from repro.launch.ntp_reg import _f32, _jet_attn, _jet_mlp, jet_forward_dense, \
+    ntp_smoothness
+from repro.models import init_model
+from repro.models.layers import embed
+from repro.models.transformer import _pattern_at
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_arch("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, dtype="float64")
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+def _primal_forward(params, cfg, x):
+    """Plain (order-0) forward through the same block math: an order-0 jet is
+    literally the standard computation, so nested jacfwd through THIS function
+    is an independent oracle for orders >= 1."""
+    g = cfg.group
+    layers = params["stack"]["groups"]["layers"]
+
+    def group_body(coeffs, gparams):
+        xx = J.Jet(coeffs)
+        for j in range(g):
+            lp = gparams["layers"][j]
+            window = cfg.window if _pattern_at(cfg, j) == "local" else None
+            h = J.rms_norm(xx, lp["ln1"].astype(x.dtype), offset=1.0)
+            xx = J.add(xx, _jet_attn(_f32(lp["attn"]), cfg, h, window))
+            h = J.rms_norm(xx, lp["ln2"].astype(x.dtype), offset=1.0)
+            xx = J.add(xx, _jet_mlp(_f32(lp["ffn"]), cfg, h))
+        return xx.coeffs, None
+
+    coeffs, _ = jax.lax.scan(group_body, x[None], {"layers": _f32(layers)})
+    out = J.rms_norm(J.Jet(coeffs), params["final_norm"].astype(x.dtype), offset=1.0)
+    return out.coeffs[0]
+
+
+def test_transformer_jet_matches_jacfwd(dense_setup):
+    cfg, params, toks = dense_setup
+    order = 3
+    x0 = embed(params["embed"], toks, cfg).astype(jnp.float64)
+    v = jax.random.normal(jax.random.PRNGKey(2), x0.shape, jnp.float64) * 0.1
+
+    ours = J.derivatives(jet_forward_dense(params, cfg, toks, order, direction=v))
+
+    h = lambda t: _primal_forward(params, cfg, x0 + t * v)
+    for k in range(order + 1):
+        ref = h(0.0)
+        np.testing.assert_allclose(np.asarray(ours[k]), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-8, err_msg=f"order {k}")
+        h = jax.jacfwd(h)
+
+
+def test_ntp_smoothness_scalar_and_grad(dense_setup):
+    cfg, params, toks = dense_setup
+    val = ntp_smoothness(params, cfg, {"tokens": toks}, 2)
+    assert np.isfinite(float(val)) and float(val) >= 0
+    g = jax.grad(lambda p: ntp_smoothness(p, cfg, {"tokens": toks}, 2))(params)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_rejects_non_dense():
+    cfg = get_arch("rwkv6-3b").reduced()
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        jet_forward_dense(params, cfg, jnp.zeros((1, 4), jnp.int32), 2)

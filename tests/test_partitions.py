@@ -1,0 +1,63 @@
+"""Property tests for the combinatorial core (partitions / Faa di Bruno)."""
+
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (bell_number, faa_di_bruno_table, partition_count,
+                        partitions, raw_bell_coefficient, total_fdb_terms)
+
+# classical partition-function values p(0..15) (OEIS A000041)
+P_KNOWN = [1, 1, 2, 3, 5, 7, 11, 15, 22, 30, 42, 56, 77, 101, 135, 176]
+
+
+def test_partition_counts_match_oeis():
+    for n, want in enumerate(P_KNOWN[1:], start=1):
+        assert partition_count(n) == want
+
+
+@given(st.integers(1, 14))
+@settings(max_examples=20, deadline=None)
+def test_partitions_are_valid(n):
+    seen = set()
+    for part in partitions(n):
+        assert sum(part) == n
+        assert all(p >= 1 for p in part)
+        assert tuple(part) == tuple(sorted(part, reverse=True))
+        seen.add(part)
+    assert len(seen) == partition_count(n)
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_raw_bell_coefficients_sum_to_bell_number(n):
+    """sum_p n!/prod_j (j!)^{p_j} p_j! = B_n -- end-to-end generator check."""
+    total = sum(raw_bell_coefficient(p, n) for p in partitions(n))
+    assert total == bell_number(n)
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_fdb_table_identity_composition(n):
+    """Composing with g(t) = t (u_1 = 1, rest 0) must be the identity:
+    only the partition (1^n) survives and its coefficient is 1."""
+    terms = [t for t in faa_di_bruno_table(n)
+             if all(j == 1 for j, _ in t.powers)]
+    assert len(terms) == 1
+    assert terms[0].coef == 1
+    assert terms[0].order == n
+
+
+@given(st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_fdb_taylor_coefficients_sum(n):
+    """h = f(g) with F_m = 1, u_j = 1 for all j: h_n = sum_p |p|!/prod p_j!
+    = composition count of n (ordered compositions) = 2^(n-1)."""
+    total = sum(t.coef for t in faa_di_bruno_table(n))
+    assert total == 2 ** (n - 1)
+
+
+def test_total_terms_growth_quasilinear():
+    # p(n) growth: the loop work sum_{k<=n} p(k) stays tiny (paper claim)
+    assert total_fdb_terms(10) == sum(P_KNOWN[1:11])
