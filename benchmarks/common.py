@@ -5,8 +5,9 @@ their CUDA sync, explicit gc between trials, perf_counter)."""
 from __future__ import annotations
 
 import gc
+import itertools
 import time
-from typing import Callable
+from typing import Callable, Dict, Iterator
 
 import jax
 
@@ -27,3 +28,14 @@ def time_fn(fn: Callable, *args, trials: int = 5, warmup: int = 2) -> float:
 
 def csv_row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def axis_product(**axes) -> Iterator[Dict]:
+    """Cartesian product over named benchmark axes, yielding kwargs dicts.
+
+    The operator benchmarks sweep ``axis_product(op=..., engine=...)``; any
+    suite that grows a new dimension (impl, order, batch) just adds a kwarg.
+    """
+    names = list(axes)
+    for combo in itertools.product(*(axes[n] for n in names)):
+        yield dict(zip(names, combo))

@@ -1,0 +1,61 @@
+"""Operator-axis benchmark: residual evaluation cost per PDE x engine.
+
+For every registered differential operator this times one jitted residual
+evaluation over a collocation batch, for the quasilinear n-TangentProp engine
+(jnp and pallas impls) and the nested-autodiff baseline.  The per-operator
+ratio autodiff/ntp is the paper's headline quantity generalized beyond the
+Burgers workload: it grows with the operator's derivative order (heat/wave:
+2, KdV: 3) exactly as the O(M^n) vs O(n p(n) M) analysis predicts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ntp import init_mlp
+from repro.data.collocation import sample_box
+from repro.pinn.operators import get_operator, operator_names, residual_values
+
+from .common import axis_product, csv_row, time_fn
+
+DEFAULT_OPS = ("burgers", "heat", "wave", "allen-cahn", "kdv", "poisson2d")
+
+
+def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
+        operators=DEFAULT_OPS, include_pallas: bool = True):
+    # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
+    # and would change the precision (and timings) of every suite after this
+    # one.  Timing is dtype-uniform with the other suites instead.
+    rows = []
+    ntp_times = {}
+    cases = list(axis_product(op=operators, engine=("ntp", "autodiff")))
+    for case in cases:
+        op = get_operator(case["op"])
+        params = init_mlp(jax.random.PRNGKey(0), op.d_in, width, depth, 1,
+                          dtype=jnp.float64)
+        x = sample_box(jax.random.PRNGKey(1), op.domain, n_pts, jnp.float64)
+
+        impls = ("jnp", "pallas") if (case["engine"] == "ntp" and
+                                      include_pallas) else ("jnp",)
+        for impl in impls:
+            fn = jax.jit(functools.partial(
+                lambda p, pts, _op, _engine, _impl: residual_values(
+                    p, _op, pts, engine=_engine, impl=_impl),
+                _op=op, _engine=case["engine"], _impl=impl))
+            t = time_fn(fn, params, x, trials=trials)
+            tag = case["engine"] if impl == "jnp" else f"ntp_{impl}"
+            if case["engine"] == "ntp" and impl == "jnp":
+                ntp_times[op.name] = t
+            derived = f"order={op.order};d_in={op.d_in}"
+            if case["engine"] == "autodiff" and op.name in ntp_times:
+                derived += f";vs_ntp_x={t / ntp_times[op.name]:.2f}"
+            rows.append(csv_row(f"residual_{op.name}_{tag}", t, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

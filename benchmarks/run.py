@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (burgers_e2e, fwd_bwd, memory_scaling, partition_growth,
-                   ratio_grid, roofline)
+    from . import (burgers_e2e, fwd_bwd, memory_scaling, operators_bench,
+                   partition_growth, ratio_grid, roofline)
 
     suites = {
         "partition_growth": lambda: partition_growth.run(16),
@@ -28,6 +28,10 @@ def main() -> None:
                                        trials=5 if args.full else 3),
         "ratio_grid": lambda: ratio_grid.run(trials=3 if args.full else 2),
         "memory_scaling": lambda: memory_scaling.run(6),
+        "operators": lambda: operators_bench.run(
+            n_pts=1024 if args.full else 256,
+            trials=5 if args.full else 2,
+            include_pallas=args.full),
         "burgers_e2e": lambda: burgers_e2e.run(
             adam_steps=200 if args.full else 40,
             lbfgs_steps=40 if args.full else 8),

@@ -8,11 +8,11 @@ from .base import (LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K, DECODE_32K,
 
 def _load_all():
     from . import (gemma2_27b, gemma3_4b, granite_3_2b, llama4_maverick,
-                   llava_next_mistral_7b, mixtral_8x7b, pinn_mlp, qwen3_0_6b,
-                   rwkv6_3b, whisper_large_v3, zamba2_2_7b)
+                   llava_next_mistral_7b, mixtral_8x7b, pinn_mlp, pinn_pde,
+                   qwen3_0_6b, rwkv6_3b, whisper_large_v3, zamba2_2_7b)
     mods = [gemma3_4b, qwen3_0_6b, gemma2_27b, granite_3_2b, mixtral_8x7b,
             llama4_maverick, zamba2_2_7b, whisper_large_v3,
-            llava_next_mistral_7b, rwkv6_3b, pinn_mlp]
+            llava_next_mistral_7b, rwkv6_3b, pinn_mlp, pinn_pde]
     return {m.CONFIG.name: m.CONFIG for m in mods}
 
 

@@ -1,0 +1,23 @@
+"""PDE-operator PINN architecture: 2-input tanh MLP for the multi-PDE
+scenarios (heat / wave / KdV / Allen-Cahn / 2-D Poisson).
+
+Wider than the paper's 3x24 Burgers net because the 2-D manufactured
+solutions carry more structure; registered so --arch pinn-pde drives the
+operator workloads through the same launcher surface as pinn-mlp."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pinn-pde",
+    family="pinn",
+    n_layers=3,
+    d_model=32,          # width
+    n_heads=1,
+    n_kv_heads=1,
+    head_dim=1,
+    d_ff=32,
+    vocab=2,             # d_in = 2 (t, x) or (x, y); d_out = 1
+    attn_pattern=("global",),
+    dtype="float64",
+    source="[operator subsystem default: 3 hidden layers x 32 neurons, tanh]",
+)

@@ -1,6 +1,12 @@
-"""PINN training framework: self-similar Burgers profiles (paper section IV-C)."""
+"""PINN training framework: differential-operator subsystem (multi-PDE) plus
+the paper's self-similar Burgers profiles (section IV-C)."""
 
 from .burgers import (exact_profile, lambda_window, profile_lambda,
                       residual_derivs_autodiff, residual_jet, smoothness_order)
-from .losses import LossWeights, pinn_loss
-from .trainer import PINNResult, PINNRunConfig, train
+from .losses import (LossWeights, bc_targets, burgers_pinn_loss, pinn_loss,
+                     residual_jet_u)
+from .operators import (Operator, autodiff_pure_derivs_fn, burgers_operator,
+                        get_operator, ntp_pure_derivs, operator_names,
+                        register, residual_of_fn, residual_values)
+from .trainer import (OperatorResult, OperatorRunConfig, PINNResult,
+                      PINNRunConfig, train, train_operator)

@@ -78,11 +78,12 @@ def jet_derivative(j: J.Jet) -> J.Jet:
 
 
 def residual_jet(params: MLPParams, lam, x: jnp.ndarray, order: int,
-                 impl: str = "jnp") -> J.Jet:
+                 activation: str = "tanh", impl: str = "jnp") -> J.Jet:
     """Jet of R along X at each collocation point; R-jet order = ``order``.
 
     Needs the u-jet to order+1 (R contains U').  One n-TangentProp pass."""
-    u = ntp_forward(params, x, order + 1, impl=impl)      # (order+2, N, 1)
+    u = ntp_forward(params, x, order + 1, activation=activation,
+                    impl=impl)                             # (order+2, N, 1)
     up = jet_derivative(u)                                 # order+1
     u = J.Jet(u.coeffs[:order + 1])                        # truncate to order
     up = J.Jet(up.coeffs[:order + 1])
@@ -92,14 +93,14 @@ def residual_jet(params: MLPParams, lam, x: jnp.ndarray, order: int,
 
 
 def residual_derivs_autodiff(params: MLPParams, lam, x: jnp.ndarray,
-                             order: int) -> jnp.ndarray:
+                             order: int, activation: str = "tanh") -> jnp.ndarray:
     """Baseline: same quantities via nested autodiff (O(M^n) graph).
 
     Returns (order+1, N, 1) raw derivatives of R, matching
     J.derivatives(residual_jet(...))."""
 
     def u_fn(xs):
-        return mlp_apply(params, xs[None, :], unroll=True)[0, 0]
+        return mlp_apply(params, xs[None, :], activation, unroll=True)[0, 0]
 
     def r_fn(xs):
         u = u_fn(xs)

@@ -1,10 +1,19 @@
-"""PINN loss assembly: residual MSE + Sobolev terms + high-order origin
-smoothness + boundary conditions (paper eq. 1, 2 and appendix A)."""
+"""PINN loss assembly, generic over a differential operator.
+
+``pinn_loss`` is the operator-generic objective: residual MSE over interior
+collocation points plus boundary/initial supervision against the operator's
+exact solution, with the derivative engine ("ntp" quasilinear vs "autodiff"
+baseline) and kernel impl ("jnp" vs "pallas") as free axes.  The self-similar
+Burgers workload keeps its specialized objective (learnable lambda, Sobolev
+term, high-order origin smoothness -- paper eq. 1, 2 and appendix A) as
+``burgers_pinn_loss``; its residual algebra is also registered in the
+operator registry as ``"burgers"``.
+"""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +22,7 @@ from repro.core import jet as J
 from repro.core.ntp import MLPParams, mlp_apply
 
 from .burgers import exact_profile, residual_derivs_autodiff, residual_jet
+from .operators import Operator, get_operator, residual_values
 
 
 @dataclass(frozen=True)
@@ -23,6 +33,37 @@ class LossWeights:
     bc: float = 10.0
 
 
+# ---------------------------------------------------------------------------
+# generic operator objective
+# ---------------------------------------------------------------------------
+
+def pinn_loss(params: MLPParams, *, op: Union[Operator, str], pts: jnp.ndarray,
+              bc_pts: jnp.ndarray, bc_vals: jnp.ndarray,
+              weights: LossWeights = LossWeights(), engine: str = "ntp",
+              impl: str = "jnp",
+              activation: str = "tanh") -> Tuple[jnp.ndarray, Dict]:
+    """Operator-generic PINN objective: w_r ||R[u]||^2 + w_bc ||u - u*||^2_bd.
+
+    ``bc_vals`` is the exact solution on ``bc_pts`` -- precompute it outside
+    jit (``op.exact`` may be numpy-backed, e.g. the Burgers profile).  Only
+    ``engine``/``impl`` change the derivative machinery; the loss surface is
+    identical across them (the paper's "exact method" property).
+    """
+    if isinstance(op, str):
+        op = get_operator(op)
+    r = residual_values(params, op, pts, engine=engine,
+                        activation=activation, impl=impl)
+    l_res = jnp.mean(r ** 2)
+    ub = mlp_apply(params, bc_pts, activation)[:, 0]
+    l_bc = jnp.mean((ub - bc_vals) ** 2)
+    loss = weights.residual * l_res + weights.bc * l_bc
+    return loss, {"residual": l_res, "bc": l_bc}
+
+
+# ---------------------------------------------------------------------------
+# the self-similar Burgers objective (paper section IV-C)
+# ---------------------------------------------------------------------------
+
 def bc_targets(k: int, domain: float) -> Tuple[float, float]:
     """U_true(+-L) with the C=1 normalization."""
     import numpy as np
@@ -30,25 +71,28 @@ def bc_targets(k: int, domain: float) -> Tuple[float, float]:
     return float(vals[0]), float(vals[1])
 
 
-def pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
-              pts: jnp.ndarray, origin_pts: jnp.ndarray, domain: float,
-              order: int, weights: LossWeights, lam_window: Tuple[float, float],
-              engine: str = "ntp", impl: str = "jnp",
-              bc_vals: Tuple[float, float] = None) -> Tuple[jnp.ndarray, Dict]:
-    """Full PINN objective.  ``engine``: "ntp" (quasilinear, ours) or
-    "autodiff" (the paper's baseline).  Everything else is identical, so the
-    benchmark isolates the derivative engine."""
+def burgers_pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
+                      pts: jnp.ndarray, origin_pts: jnp.ndarray, domain: float,
+                      order: int, weights: LossWeights,
+                      lam_window: Tuple[float, float], engine: str = "ntp",
+                      impl: str = "jnp", activation: str = "tanh",
+                      bc_vals: Tuple[float, float] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full self-similar Burgers objective.  ``engine``: "ntp" (quasilinear,
+    ours) or "autodiff" (the paper's baseline).  Everything else is identical,
+    so the benchmark isolates the derivative engine."""
     lo, hi = lam_window
     lam = lo + (hi - lo) * jax.nn.sigmoid(lam_raw)
 
     if engine == "ntp":
         # one jet to order 1 on the full domain (residual + Sobolev-1) ...
-        r_dom = J.derivatives(residual_jet(params, lam, pts, 1, impl=impl))
+        r_dom = J.derivatives(residual_jet(params, lam, pts, 1,
+                                           activation=activation, impl=impl))
         # ... and one high-order jet on the origin cluster
-        r_org = J.derivatives(residual_jet(params, lam, origin_pts, order, impl=impl))
+        r_org = J.derivatives(residual_jet(params, lam, origin_pts, order,
+                                           activation=activation, impl=impl))
     else:
-        r_dom = residual_derivs_autodiff(params, lam, pts, 1)
-        r_org = residual_derivs_autodiff(params, lam, origin_pts, order)
+        r_dom = residual_derivs_autodiff(params, lam, pts, 1, activation)
+        r_org = residual_derivs_autodiff(params, lam, origin_pts, order, activation)
 
     l_res = jnp.mean(r_dom[0] ** 2)
     l_sob = jnp.mean(r_dom[1] ** 2)
@@ -56,10 +100,11 @@ def pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
 
     # boundary conditions: U(0)=0, U'(0)=-1, U(+-L) pinned to the C=1 profile
     x0 = jnp.zeros((1, 1), pts.dtype)
-    u0j = J.derivatives(residual_jet_u(params, x0, impl=impl))
+    u0j = J.derivatives(residual_jet_u(params, x0, activation=activation,
+                                       impl=impl))
     u0, du0 = u0j[0, 0, 0], u0j[1, 0, 0]
     xb = jnp.asarray([[-domain], [domain]], pts.dtype)
-    ub = mlp_apply(params, xb)
+    ub = mlp_apply(params, xb, activation)
     tb = jnp.asarray(bc_vals, pts.dtype)
     l_bc = u0 ** 2 + (du0 + 1.0) ** 2 + jnp.mean((ub[:, 0] - tb) ** 2)
 
@@ -69,7 +114,8 @@ def pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
                   "bc": l_bc, "lambda": lam}
 
 
-def residual_jet_u(params: MLPParams, x: jnp.ndarray, impl: str = "jnp") -> J.Jet:
+def residual_jet_u(params: MLPParams, x: jnp.ndarray, activation: str = "tanh",
+                   impl: str = "jnp") -> J.Jet:
     """Order-1 jet of U itself (for the U(0), U'(0) boundary terms)."""
     from repro.core.ntp import ntp_forward
-    return ntp_forward(params, x, 1, impl=impl)
+    return ntp_forward(params, x, 1, activation=activation, impl=impl)

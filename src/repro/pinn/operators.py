@@ -1,0 +1,285 @@
+"""Differential-operator subsystem: PDE residuals as jet-primitive compositions.
+
+n-TangentProp turns "evaluate u and its pure derivatives at collocation
+points" into one quasilinear jet forward per coordinate axis (core/ntp.py).
+This module layers a small abstraction on top so a PDE residual is written
+ONCE against a derivative table and runs through every engine:
+
+* ``engine="ntp"``      -- per-axis jets via :func:`repro.core.ntp.ntp_grid`
+                           (``impl="jnp"`` reference or ``impl="pallas"``
+                           fused kernels);
+* ``engine="autodiff"`` -- nested ``jax.grad`` towers (the paper's baseline);
+* the same residual applied to an *analytic* function via
+  :func:`residual_of_fn` -- which is how each operator's manufactured/exact
+  solution becomes a test oracle (method of manufactured solutions: the
+  residual of the exact solution must vanish identically).
+
+An :class:`Operator` declares its input dimension, the highest pure-derivative
+order it consumes, a residual ``R(x, d)`` where ``d(axis, k)`` returns the
+k-th pure derivative of u along ``axis`` at every collocation point, and an
+exact solution over its default domain box.  Registered operators:
+
+===========  ====  =====  ==========================================
+name         d_in  order  residual
+===========  ====  =====  ==========================================
+heat          2     2     u_t - nu u_xx
+wave          2     2     u_tt - c^2 u_xx
+kdv           2     3     u_t + 6 u u_x + u_xxx
+allen-cahn    2     2     u_t - eps u_xx + u^3 - u - f(t, x)
+poisson2d     2     2     u_xx + u_yy - f(x, y)
+burgers       1     1     -lam u + ((1 + lam) x + u) u'  (self-similar ODE)
+===========  ====  =====  ==========================================
+
+Mixed partials, when an operator needs them, come from the polarization
+helper :func:`repro.core.ntp.cross` -- still 2^m directional jets, never a
+nested-autodiff graph.  New PDEs register with :func:`register`; see
+README.md for a walkthrough.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ntp import MLPParams, mlp_apply, ntp_grid
+
+# d(axis, k) -> (N,) raw k-th pure derivative of u along axis
+DerivTable = Callable[[int, int], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Operator:
+    """A differential operator with a manufactured/exact solution oracle.
+
+    ``residual(x, d)`` consumes collocation points ``x`` of shape
+    (N, d_in) and a :data:`DerivTable`; it returns the pointwise residual
+    (N,).  ``exact(x)`` is the solution the residual vanishes on; it doubles
+    as boundary/initial data for training and as the accuracy oracle in
+    tests.  ``differentiable_exact`` is False when ``exact`` is not a pure
+    jax function (e.g. the Burgers profile's bisection inversion), which
+    excludes it from autodiff-based oracle checks only.
+    """
+
+    name: str
+    d_in: int
+    order: int
+    residual: Callable[[jnp.ndarray, DerivTable], jnp.ndarray]
+    exact: Callable[[jnp.ndarray], jnp.ndarray]
+    domain: Tuple[Tuple[float, float], ...]
+    description: str = ""
+    differentiable_exact: bool = True
+
+
+_REGISTRY: Dict[str, Operator] = {}
+
+
+def register(op: Operator) -> Operator:
+    if op.name in _REGISTRY:
+        raise ValueError(f"operator {op.name!r} already registered")
+    if len(op.domain) != op.d_in:
+        raise ValueError(f"operator {op.name!r}: domain rank {len(op.domain)} "
+                         f"!= d_in {op.d_in}")
+    _REGISTRY[op.name] = op
+    return op
+
+
+def get_operator(name: str) -> Operator:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown operator {name!r}; known: {operator_names()}")
+    return _REGISTRY[name]
+
+
+def operator_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# derivative-table engines
+# ---------------------------------------------------------------------------
+
+def ntp_pure_derivs(params: MLPParams, x: jnp.ndarray, order: int,
+                    activation: str = "tanh", impl: str = "jnp") -> jnp.ndarray:
+    """(d_in, order+1, N) raw pure derivatives of the network, one jet batch."""
+    return ntp_grid(params, x, order, activation, impl)[..., 0]
+
+
+def autodiff_pure_derivs_fn(fn: Callable[[jnp.ndarray], jnp.ndarray],
+                            x: jnp.ndarray, order: int) -> jnp.ndarray:
+    """(d_in, order+1, N) pure derivatives of any scalar fn((d_in,)) -> ()
+    via nested ``jax.grad`` towers -- the O(M^order) baseline and the oracle
+    path for analytic solutions."""
+    d = x.shape[-1]
+
+    def one_axis(v):
+        def tower(xi):
+            h = lambda t: fn(xi + v * t)
+            outs = []
+            for _ in range(order + 1):
+                outs.append(h)
+                h = jax.grad(h)
+            return jnp.stack([o(jnp.asarray(0.0, x.dtype)) for o in outs])
+
+        return jax.vmap(tower)(x)            # (N, order+1)
+
+    eye = jnp.eye(d, dtype=x.dtype)
+    return jnp.transpose(jax.vmap(one_axis)(eye), (0, 2, 1))
+
+
+def _table(D: jnp.ndarray) -> DerivTable:
+    return lambda axis, k: D[axis, k]
+
+
+def residual_values(params: MLPParams, op: Operator, x: jnp.ndarray, *,
+                    engine: str = "ntp", activation: str = "tanh",
+                    impl: str = "jnp") -> jnp.ndarray:
+    """Pointwise residual (N,) of the network under ``op``."""
+    if engine == "ntp":
+        D = ntp_pure_derivs(params, x, op.order, activation, impl)
+    elif engine == "autodiff":
+        fn = lambda xi: mlp_apply(params, xi[None, :], activation, unroll=True)[0, 0]
+        D = autodiff_pure_derivs_fn(fn, x, op.order)
+    else:
+        raise ValueError(f"unknown engine {engine!r} (want 'ntp' or 'autodiff')")
+    return op.residual(x, _table(D))
+
+
+def residual_of_fn(op: Operator, fn: Callable[[jnp.ndarray], jnp.ndarray],
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """Residual of an arbitrary differentiable scalar function (the MMS oracle:
+    ``residual_of_fn(op, exact, x) == 0`` certifies the operator's algebra)."""
+    return op.residual(x, _table(autodiff_pure_derivs_fn(fn, x, op.order)))
+
+
+# ---------------------------------------------------------------------------
+# registered operators (coefficients chosen so no term degenerates)
+# ---------------------------------------------------------------------------
+
+HEAT_NU = 0.5
+WAVE_C = 2.0
+KDV_C = 4.0           # soliton speed
+AC_EPS = 0.4
+_PI = float(np.pi)
+
+
+def _heat_residual(x, d):
+    return d(0, 1) - HEAT_NU * d(1, 2)
+
+
+def _heat_exact(x):
+    return jnp.exp(-HEAT_NU * x[:, 0]) * jnp.sin(x[:, 1])
+
+
+register(Operator(
+    name="heat", d_in=2, order=2,
+    residual=_heat_residual, exact=_heat_exact,
+    domain=((0.0, 1.0), (-_PI, _PI)),
+    description="u_t - nu u_xx;  exact u = exp(-nu t) sin x",
+))
+
+
+def _wave_residual(x, d):
+    return d(0, 2) - WAVE_C ** 2 * d(1, 2)
+
+
+def _wave_exact(x):
+    return jnp.sin(x[:, 1] - WAVE_C * x[:, 0])
+
+
+register(Operator(
+    name="wave", d_in=2, order=2,
+    residual=_wave_residual, exact=_wave_exact,
+    domain=((0.0, 1.0), (-_PI, _PI)),
+    description="u_tt - c^2 u_xx;  exact u = sin(x - c t)",
+))
+
+
+def _kdv_residual(x, d):
+    u = d(0, 0)
+    return d(0, 1) + 6.0 * u * d(1, 1) + d(1, 3)
+
+
+def _kdv_exact(x):
+    arg = 0.5 * jnp.sqrt(KDV_C) * (x[:, 1] - KDV_C * x[:, 0])
+    return 0.5 * KDV_C / jnp.cosh(arg) ** 2
+
+
+register(Operator(
+    name="kdv", d_in=2, order=3,
+    residual=_kdv_residual, exact=_kdv_exact,
+    domain=((0.0, 0.4), (-8.0, 8.0)),
+    description="u_t + 6 u u_x + u_xxx;  exact single soliton, speed c",
+))
+
+
+def _ac_forcing(x):
+    # manufactured solution u* = exp(-t) sin x:
+    # u*_t - eps u*_xx + u*^3 - u* = (eps - 2) s + s^3,  s = exp(-t) sin x
+    s = jnp.exp(-x[:, 0]) * jnp.sin(x[:, 1])
+    return (AC_EPS - 2.0) * s + s ** 3
+
+
+def _ac_residual(x, d):
+    u = d(0, 0)
+    return d(0, 1) - AC_EPS * d(1, 2) + u ** 3 - u - _ac_forcing(x)
+
+
+def _ac_exact(x):
+    return jnp.exp(-x[:, 0]) * jnp.sin(x[:, 1])
+
+
+register(Operator(
+    name="allen-cahn", d_in=2, order=2,
+    residual=_ac_residual, exact=_ac_exact,
+    domain=((0.0, 1.0), (-_PI, _PI)),
+    description="u_t - eps u_xx + u^3 - u - f;  manufactured u = exp(-t) sin x",
+))
+
+
+def _poisson_residual(x, d):
+    # forcing f = -2 sin x sin y, so u = sin x sin y solves u_xx + u_yy = f
+    return d(0, 2) + d(1, 2) + 2.0 * jnp.sin(x[:, 0]) * jnp.sin(x[:, 1])
+
+
+def _poisson_exact(x):
+    return jnp.sin(x[:, 0]) * jnp.sin(x[:, 1])
+
+
+register(Operator(
+    name="poisson2d", d_in=2, order=2,
+    residual=_poisson_residual, exact=_poisson_exact,
+    domain=((0.0, _PI), (0.0, _PI)),
+    description="u_xx + u_yy - f;  exact u = sin x sin y (zero on the boundary)",
+))
+
+
+def burgers_operator(lam: float = 0.5, k: int = 1,
+                     domain: float = 2.0) -> Operator:
+    """Self-similar Burgers profile ODE (paper eq. 7) as a registry operator.
+
+    The specialized trainer (losses.burgers_pinn_loss) keeps its learnable-
+    lambda objective; this fixed-lambda form slots the same residual into the
+    generic operator surface.  Exact profile inverts X = -U - U^{2k+1} by
+    bisection (numpy), hence ``differentiable_exact=False``.
+    """
+    def residual(x, d):
+        u = d(0, 0)
+        return -lam * u + ((1.0 + lam) * x[:, 0] + u) * d(0, 1)
+
+    def exact(x):
+        from .burgers import exact_profile
+        return jnp.asarray(exact_profile(np.asarray(x[:, 0]), k),
+                           dtype=x.dtype)
+
+    return Operator(
+        name="burgers", d_in=1, order=1, residual=residual, exact=exact,
+        domain=((-domain, domain),),
+        description="-lam u + ((1+lam) X + u) u';  exact implicit profile",
+        differentiable_exact=False,
+    )
+
+
+register(burgers_operator())

@@ -1,0 +1,54 @@
+"""Hypothesis-optional property-test decorator.
+
+Property tests use hypothesis when it is installed.  Without it they fall
+back to a deterministic, evenly-spread ``pytest.mark.parametrize`` sweep over
+the same integer ranges, so ``pytest`` collects and passes (and the core
+identities still get exercised across orders/seeds) in minimal environments.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _spread(lo: int, hi: int, k: int) -> list[int]:
+    """Up to k evenly spaced integers covering [lo, hi], endpoints included."""
+    if hi - lo + 1 <= k:
+        return list(range(lo, hi + 1))
+    if k == 1:
+        return [(lo + hi) // 2]
+    step = (hi - lo) / (k - 1)
+    return sorted({int(round(lo + i * step)) for i in range(k)})
+
+
+def int_grid(*ranges: tuple[str, int, int], max_examples: int = 15):
+    """Decorator: ``int_grid(("order", 1, 6), ("seed", 0, 1000))``.
+
+    With hypothesis: ``@given`` over the integer ranges (randomized,
+    shrinking).  Without: a parametrized sweep -- the first range is covered
+    densely, later ranges are subsampled so the total case count stays near
+    ``max_examples``.
+    """
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            strats = {name: st.integers(lo, hi) for name, lo, hi in ranges}
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**strats)(fn))
+        return deco
+
+    names = ",".join(name for name, _, _ in ranges)
+    first = _spread(ranges[0][1], ranges[0][2], max_examples)
+    rest_k = max(1, max_examples // max(len(first), 1))
+    rest = [_spread(lo, hi, rest_k) for _, lo, hi in ranges[1:]]
+    combos = [c if len(c) > 1 else c[0]
+              for c in itertools.product(first, *rest)]
+    return pytest.mark.parametrize(names, combos)

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import int_grid
 
 from repro.core import jet as J
 
@@ -62,8 +61,7 @@ def test_positive_domain_functions(name, jet_fn, ref_fn):
                                    err_msg=f"{name} order {k}")
 
 
-@given(st.integers(1, 7))
-@settings(max_examples=7, deadline=None)
+@int_grid(("order", 1, 7), max_examples=7)
 def test_mul_is_cauchy_convolution(order):
     a = seeded(X0, V, order)
     b = J.sin(a)
@@ -140,8 +138,7 @@ def test_rms_and_layer_norm_jets():
             np.testing.assert_allclose(out[k], refs[k], rtol=1e-6, atol=1e-9)
 
 
-@given(st.integers(0, 6))
-@settings(max_examples=7, deadline=None)
+@int_grid(("order", 0, 6), max_examples=7)
 def test_derivative_roundtrip(order):
     j = seeded(X0, V, order)
     back = J.from_derivatives(J.derivatives(j))
@@ -157,8 +154,7 @@ def _random_jet(seed, order, shape=(3, 4)):
     return J.Jet(jax.random.normal(k, (order + 1,) + shape, jnp.float64) * 0.5)
 
 
-@given(st.integers(1, 6), st.integers(0, 1000))
-@settings(max_examples=15, deadline=None)
+@int_grid(("order", 1, 6), ("seed", 0, 1000), max_examples=15)
 def test_mul_associative_and_commutative(order, seed):
     a, b, c = (_random_jet(seed + i, order) for i in range(3))
     ab_c = J.mul(J.mul(a, b), c)
@@ -168,8 +164,7 @@ def test_mul_associative_and_commutative(order, seed):
                                rtol=1e-12, atol=0)
 
 
-@given(st.integers(1, 6), st.integers(0, 1000))
-@settings(max_examples=15, deadline=None)
+@int_grid(("order", 1, 6), ("seed", 0, 1000), max_examples=15)
 def test_mul_distributes_over_add(order, seed):
     a, b, c = (_random_jet(seed + i, order) for i in range(3))
     lhs = J.mul(a, J.add(b, c))
@@ -177,8 +172,7 @@ def test_mul_distributes_over_add(order, seed):
     np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-10, atol=1e-12)
 
 
-@given(st.integers(1, 6), st.integers(0, 1000))
-@settings(max_examples=15, deadline=None)
+@int_grid(("order", 1, 6), ("seed", 0, 1000), max_examples=15)
 def test_exp_is_a_homomorphism(order, seed):
     a, b = (_random_jet(seed + i, order) for i in range(2))
     lhs = J.exp(J.add(a, b))
@@ -186,8 +180,7 @@ def test_exp_is_a_homomorphism(order, seed):
     np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-9, atol=1e-10)
 
 
-@given(st.integers(1, 6), st.integers(0, 1000))
-@settings(max_examples=10, deadline=None)
+@int_grid(("order", 1, 6), ("seed", 0, 1000), max_examples=10)
 def test_tanh_double_angle_identity(order, seed):
     """tanh(2a) == 2 tanh(a) / (1 + tanh(a)^2): exercises compose + div + mul
     together against an independent functional identity."""

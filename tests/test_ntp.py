@@ -16,7 +16,10 @@ def net():
     return params, x
 
 
-@pytest.mark.parametrize("order", [0, 1, 3, 5, 7])
+@pytest.mark.parametrize("order", [
+    0, 1, 3, 5,
+    # order-7 nested autodiff takes ~2 min on CPU; tier-1 keeps order <= 5
+    pytest.param(7, marks=pytest.mark.slow)])
 def test_matches_nested_autodiff(net, order):
     params, x = net
     ours = ntp_derivatives(params, x, order)

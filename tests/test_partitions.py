@@ -2,8 +2,7 @@
 
 import math
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import int_grid
 
 from repro.core import (bell_number, faa_di_bruno_table, partition_count,
                         partitions, raw_bell_coefficient, total_fdb_terms)
@@ -17,8 +16,7 @@ def test_partition_counts_match_oeis():
         assert partition_count(n) == want
 
 
-@given(st.integers(1, 14))
-@settings(max_examples=20, deadline=None)
+@int_grid(("n", 1, 14), max_examples=20)
 def test_partitions_are_valid(n):
     seen = set()
     for part in partitions(n):
@@ -29,16 +27,14 @@ def test_partitions_are_valid(n):
     assert len(seen) == partition_count(n)
 
 
-@given(st.integers(1, 12))
-@settings(max_examples=20, deadline=None)
+@int_grid(("n", 1, 12), max_examples=20)
 def test_raw_bell_coefficients_sum_to_bell_number(n):
     """sum_p n!/prod_j (j!)^{p_j} p_j! = B_n -- end-to-end generator check."""
     total = sum(raw_bell_coefficient(p, n) for p in partitions(n))
     assert total == bell_number(n)
 
 
-@given(st.integers(1, 12))
-@settings(max_examples=20, deadline=None)
+@int_grid(("n", 1, 12), max_examples=20)
 def test_fdb_table_identity_composition(n):
     """Composing with g(t) = t (u_1 = 1, rest 0) must be the identity:
     only the partition (1^n) survives and its coefficient is 1."""
@@ -49,8 +45,7 @@ def test_fdb_table_identity_composition(n):
     assert terms[0].order == n
 
 
-@given(st.integers(1, 10))
-@settings(max_examples=10, deadline=None)
+@int_grid(("n", 1, 10), max_examples=10)
 def test_fdb_taylor_coefficients_sum(n):
     """h = f(g) with F_m = 1, u_j = 1 for all j: h_n = sum_p |p|!/prod p_j!
     = composition count of n (ordered compositions) = 2^(n-1)."""
