@@ -2,10 +2,13 @@
 
 For every registered differential operator this times one jitted residual
 evaluation over a collocation batch, for the quasilinear n-TangentProp engine
-(jnp and pallas impls) and the nested-autodiff baseline.  The per-operator
-ratio autodiff/ntp is the paper's headline quantity generalized beyond the
-Burgers workload: it grows with the operator's derivative order (heat/wave:
-2, KdV: 3) exactly as the O(M^n) vs O(n p(n) M) analysis predicts.
+(``ntp`` and ``ntp/pallas`` specs) and the nested-autodiff baseline.  The
+per-operator ratio autodiff/ntp is the paper's headline quantity generalized
+beyond the Burgers workload: it grows with the operator's derivative order
+(heat/wave: 2, KdV: 3) exactly as the O(M^n) vs O(n p(n) M) analysis
+predicts.  ``network`` selects any registered architecture (the engine
+surface is network-agnostic), so e.g. ``network="fourier"`` times the
+random-feature embedding at zero extra benchmark code.
 """
 
 from __future__ import annotations
@@ -15,44 +18,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.ntp import init_mlp
+from repro.core.engines import DerivativeEngine
+from repro.core.network import make_network
 from repro.data.collocation import sample_box
-from repro.pinn.operators import get_operator, operator_names, residual_values
+from repro.pinn.operators import get_operator, residual_values
 
 from .common import axis_product, csv_row, time_fn
 
-DEFAULT_OPS = ("burgers", "heat", "wave", "allen-cahn", "kdv", "poisson2d")
+DEFAULT_OPS = ("burgers", "heat", "wave", "allen-cahn", "kdv", "poisson2d",
+               "advection-diffusion")
 
 
 def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
-        operators=DEFAULT_OPS, include_pallas: bool = True):
+        operators=DEFAULT_OPS, include_pallas: bool = True,
+        network: str = "dense"):
     # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
     # and would change the precision (and timings) of every suite after this
     # one.  Timing is dtype-uniform with the other suites instead.
+    specs = ("ntp", "ntp/pallas", "autodiff") if include_pallas \
+        else ("ntp", "autodiff")
     rows = []
     ntp_times = {}
-    cases = list(axis_product(op=operators, engine=("ntp", "autodiff")))
-    for case in cases:
+    for case in axis_product(op=operators, spec=specs):
         op = get_operator(case["op"])
-        params = init_mlp(jax.random.PRNGKey(0), op.d_in, width, depth, 1,
-                          dtype=jnp.float64)
+        net = make_network(network, d_in=op.d_in, d_out=1, width=width,
+                           depth=depth)
+        engine = DerivativeEngine.from_spec(case["spec"])
+        params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
         x = sample_box(jax.random.PRNGKey(1), op.domain, n_pts, jnp.float64)
 
-        impls = ("jnp", "pallas") if (case["engine"] == "ntp" and
-                                      include_pallas) else ("jnp",)
-        for impl in impls:
-            fn = jax.jit(functools.partial(
-                lambda p, pts, _op, _engine, _impl: residual_values(
-                    p, _op, pts, engine=_engine, impl=_impl),
-                _op=op, _engine=case["engine"], _impl=impl))
-            t = time_fn(fn, params, x, trials=trials)
-            tag = case["engine"] if impl == "jnp" else f"ntp_{impl}"
-            if case["engine"] == "ntp" and impl == "jnp":
-                ntp_times[op.name] = t
-            derived = f"order={op.order};d_in={op.d_in}"
-            if case["engine"] == "autodiff" and op.name in ntp_times:
-                derived += f";vs_ntp_x={t / ntp_times[op.name]:.2f}"
-            rows.append(csv_row(f"residual_{op.name}_{tag}", t, derived))
+        fn = jax.jit(functools.partial(
+            lambda p, pts, _op, _eng, _net: residual_values(
+                p, _op, pts, engine=_eng, net=_net),
+            _op=op, _eng=engine, _net=net))
+        t = time_fn(fn, params, x, trials=trials)
+        tag = engine.spec.replace("/", "_")
+        if engine.spec == "ntp":
+            ntp_times[op.name] = t
+        derived = f"order={op.order};d_in={op.d_in};net={network}"
+        if engine.spec == "autodiff" and op.name in ntp_times:
+            derived += f";vs_ntp_x={t / ntp_times[op.name]:.2f}"
+        rows.append(csv_row(f"residual_{op.name}_{tag}", t, derived))
     return rows
 
 

@@ -1,9 +1,11 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Fast mode keeps CPU wall time sane;
-pass --full for the paper-scale grids.
+pass --full for the paper-scale grids, --smoke for the CI completeness check
+(tiny shapes, one trial -- benchmark code must at least *run* on every PR so
+it cannot rot uncollected).
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only NAME]
 """
 
 from __future__ import annotations
@@ -16,27 +18,47 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / single trial; used by the CI tier-1 "
+                         "job to keep benchmark code importable and runnable")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
     from . import (burgers_e2e, fwd_bwd, memory_scaling, operators_bench,
                    partition_growth, ratio_grid, roofline)
 
-    suites = {
-        "partition_growth": lambda: partition_growth.run(16),
-        "fwd_bwd": lambda: fwd_bwd.run(max_order=8 if args.full else 5,
-                                       trials=5 if args.full else 3),
-        "ratio_grid": lambda: ratio_grid.run(trials=3 if args.full else 2),
-        "memory_scaling": lambda: memory_scaling.run(6),
-        "operators": lambda: operators_bench.run(
-            n_pts=1024 if args.full else 256,
-            trials=5 if args.full else 2,
-            include_pallas=args.full),
-        "burgers_e2e": lambda: burgers_e2e.run(
-            adam_steps=200 if args.full else 40,
-            lbfgs_steps=40 if args.full else 8),
-        "roofline": roofline.run,
+    mode = "smoke" if args.smoke else ("full" if args.full else "fast")
+    # one entry per suite: (runner, {mode: kwargs}) -- a new suite added here
+    # is automatically part of the CI --smoke completeness check
+    registry = {
+        "partition_growth": (partition_growth.run, {
+            "smoke": dict(max_order=8), "fast": dict(max_order=16),
+            "full": dict(max_order=16)}),
+        "fwd_bwd": (fwd_bwd.run, {
+            "smoke": dict(max_order=3, trials=1),
+            "fast": dict(max_order=5, trials=3),
+            "full": dict(max_order=8, trials=5)}),
+        "ratio_grid": (ratio_grid.run, {
+            "smoke": dict(trials=1), "fast": dict(trials=2),
+            "full": dict(trials=3)}),
+        "memory_scaling": (memory_scaling.run, {
+            "smoke": dict(max_order=4), "fast": dict(max_order=6),
+            "full": dict(max_order=6)}),
+        "operators": (operators_bench.run, {
+            "smoke": dict(n_pts=16, width=8, depth=2, trials=1,
+                          include_pallas=True),
+            "fast": dict(n_pts=256, trials=2, include_pallas=False),
+            "full": dict(n_pts=1024, trials=5, include_pallas=True)}),
+        "burgers_e2e": (burgers_e2e.run, {
+            "smoke": dict(adam_steps=4, lbfgs_steps=2),
+            "fast": dict(adam_steps=40, lbfgs_steps=8),
+            "full": dict(adam_steps=200, lbfgs_steps=40)}),
+        "roofline": (roofline.run, {"smoke": {}, "fast": {}, "full": {}}),
     }
+    suites = {name: (lambda fn=fn, kw=kws[mode]: fn(**kw))
+              for name, (fn, kws) in registry.items()}
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites.items():

@@ -2,13 +2,17 @@
 
     PYTHONPATH=src python examples/pde_operator.py --op heat --steps 2000
     PYTHONPATH=src python examples/pde_operator.py --op kdv --engine autodiff
-    PYTHONPATH=src python examples/pde_operator.py --op poisson2d --impl pallas
+    PYTHONPATH=src python examples/pde_operator.py --op poisson2d --engine ntp/pallas
+    PYTHONPATH=src python examples/pde_operator.py --op advection-diffusion \
+        --network fourier --fourier-features 32
 
 Each operator carries a manufactured/exact solution: it supplies the
 boundary/initial data during training and the L2 accuracy oracle at the end.
-``--engine autodiff`` runs the identical objective through nested autodiff
-(the paper's baseline) -- watch the per-step wall clock diverge as the
-operator's derivative order grows (KdV needs u_xxx).
+``--engine`` is a derivative-engine spec ("ntp", "ntp/pallas", "autodiff") --
+``autodiff`` runs the identical objective through nested autodiff (the
+paper's baseline); watch the per-step wall clock diverge as the operator's
+derivative order grows (KdV needs u_xxx).  ``--network`` picks any
+registered architecture: dense (paper), mlp, residual, fourier.
 """
 
 import argparse
@@ -17,6 +21,7 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+from repro.core import network_names  # noqa: E402
 from repro.pinn import (OperatorRunConfig, get_operator,  # noqa: E402
                         operator_names, train_operator)
 
@@ -24,8 +29,11 @@ from repro.pinn import (OperatorRunConfig, get_operator,  # noqa: E402
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--op", default="heat", choices=list(operator_names()))
-    ap.add_argument("--engine", choices=["ntp", "autodiff"], default="ntp")
-    ap.add_argument("--impl", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--engine", default="ntp",
+                    help="engine spec: ntp | ntp/pallas | autodiff")
+    ap.add_argument("--network", default="dense", choices=list(network_names()))
+    ap.add_argument("--fourier-features", type=int, default=16,
+                    help="embedding size for --network fourier")
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--lbfgs", type=int, default=0)
     ap.add_argument("--width", type=int, default=32)
@@ -37,9 +45,14 @@ def main():
     op = get_operator(args.op)
     print(f"operator {op.name}: {op.description}")
     print(f"  d_in={op.d_in}, max pure-derivative order={op.order}, "
-          f"domain={op.domain}, engine={args.engine}")
+          f"mixed partials={op.mixed or 'none'}, domain={op.domain}")
+    print(f"  engine={args.engine}, network={args.network}")
 
-    cfg = OperatorRunConfig(op=args.op, engine=args.engine, impl=args.impl,
+    net_kwargs = {}
+    if args.network == "fourier":
+        net_kwargs["n_features"] = args.fourier_features
+    cfg = OperatorRunConfig(op=args.op, engine=args.engine,
+                            network=args.network, net_kwargs=net_kwargs,
                             adam_steps=args.steps, lbfgs_steps=args.lbfgs,
                             width=args.width, depth=args.depth,
                             activation=args.activation, adam_lr=args.lr)

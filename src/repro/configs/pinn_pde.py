@@ -1,9 +1,15 @@
-"""PDE-operator PINN architecture: 2-input tanh MLP for the multi-PDE
-scenarios (heat / wave / KdV / Allen-Cahn / 2-D Poisson).
+"""PDE-operator PINN architecture: tanh MLP for the multi-PDE scenarios
+(heat / wave / KdV / Allen-Cahn / 2-D Poisson / advection-diffusion, the
+last with a genuine u_xy cross term served by polarization).
 
 Wider than the paper's 3x24 Burgers net because the 2-D manufactured
 solutions carry more structure; registered so --arch pinn-pde drives the
-operator workloads through the same launcher surface as pinn-mlp."""
+operator workloads through the same launcher surface as pinn-mlp.  The
+training-side knobs live on ``repro.pinn.OperatorRunConfig``: ``engine``
+takes a derivative-engine spec ("ntp", "ntp/pallas", "autodiff") and
+``network`` a registered architecture ("dense", "mlp", "residual",
+"fourier" -- see ``repro.core.network``); d_in follows the operator (2 for
+the (t, x) PDEs, 3 for advection-diffusion's (t, x, y))."""
 
 from .base import ArchConfig
 

@@ -1,17 +1,26 @@
-"""Core n-TangentProp: jets, Faa di Bruno tables, activation derivative stacks."""
+"""Core n-TangentProp: jets, Faa di Bruno tables, activation derivative
+stacks, jet-traceable networks, and the derivative-engine hierarchy."""
 
 from . import jet
 from .activations import TAYLOR_STACKS, tanh_taylor_stack
+from .engines import (AutodiffEngine, DerivativeEngine, JaxJetEngine,
+                      NTPEngine, resolve_engine)
 from .jet import Jet
-from .ntp import (MLPParams, init_mlp, mlp_apply, ntp_derivatives, ntp_forward,
-                  ntp_grid, num_params)
+from .network import (DenseMLP, MLP, FourierFeatureMLP, Network, ResidualMLP,
+                      make_network, network_names, register_network)
+from .ntp import (MLPParams, cross, init_mlp, mlp_apply, ntp_derivatives,
+                  ntp_forward, ntp_grid, ntp_jet, num_params)
 from .partitions import (bell_number, faa_di_bruno_table, partition_count,
                          partitions, raw_bell_coefficient, total_fdb_terms)
 
 __all__ = [
     "jet", "Jet", "TAYLOR_STACKS", "tanh_taylor_stack",
-    "MLPParams", "init_mlp", "mlp_apply", "ntp_derivatives", "ntp_forward",
-    "ntp_grid", "num_params",
+    "AutodiffEngine", "DerivativeEngine", "JaxJetEngine", "NTPEngine",
+    "resolve_engine",
+    "DenseMLP", "MLP", "FourierFeatureMLP", "Network", "ResidualMLP",
+    "make_network", "network_names", "register_network",
+    "MLPParams", "cross", "init_mlp", "mlp_apply", "ntp_derivatives",
+    "ntp_forward", "ntp_grid", "ntp_jet", "num_params",
     "bell_number", "faa_di_bruno_table", "partition_count", "partitions",
     "raw_bell_coefficient", "total_fdb_terms",
 ]

@@ -1,0 +1,306 @@
+"""Jet-traceable network architectures for the derivative engines.
+
+The paper states n-TangentProp for uniform-width dense MLPs, but the jet
+algebra (core/jet.py) is architecture-agnostic: anything built from linear
+maps, Cauchy products, and registered smooth activations pushes a truncated
+Taylor jet forward in the same O(n p(n) M).  This module makes that a
+first-class abstraction: a :class:`Network` is an object with
+
+* ``init(key, dtype)``            -- parameter pytree construction;
+* ``apply(params, x, unroll=)``   -- plain forward (N, d_in) -> (N, d_out).
+  ``unroll=True`` must avoid ``lax.scan`` so ``jax.experimental.jet`` (no
+  scan rule) can trace it -- the :class:`~repro.core.engines.JaxJetEngine`
+  oracle depends on this;
+* ``jet_apply(params, jet, impl=)`` -- push a :class:`repro.core.jet.Jet`
+  of the inputs through the network.  ``impl="jnp"`` runs the reference jet
+  algebra; ``impl="pallas"`` routes every dense layer through the fused
+  Pallas kernel dispatch (kernels/ops.jet_dense), which falls back to the
+  reference automatically for activations without a kernel table.
+
+Shipped networks:
+
+=================  ==========================================================
+DenseMLP           uniform-width MLP over :class:`repro.core.ntp.MLPParams`
+                   (fully backward-compatible with the seed API)
+MLP                variable per-layer widths
+ResidualMLP        pre-activation skip connections ``h <- h + act(W h + b)``
+FourierFeatureMLP  random-feature embedding ``[sin 2pi Bx, cos 2pi Bx]`` in
+                   front of an MLP trunk (the standard PINN spectral-bias
+                   fix; B is fixed, not trained)
+=================  ==========================================================
+
+New architectures implement the three-method protocol (or register a factory
+with :func:`register_network`) and every :class:`DerivativeEngine`, the
+operator subsystem, ``pinn_loss``, and ``train_operator`` consume them
+without further plumbing.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from . import jet as J
+from .activations import PRIMALS
+from .ntp import MLPParams, init_mlp, mlp_apply, ntp_jet, xavier_uniform
+
+Params = Any  # parameter pytree; its structure is owned by the network
+
+
+@runtime_checkable
+class Network(Protocol):
+    """Anything the derivative engines can differentiate."""
+
+    d_in: int
+    d_out: int
+    activation: str
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params: ...
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray: ...
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet: ...
+
+
+# ---------------------------------------------------------------------------
+# shared building blocks
+# ---------------------------------------------------------------------------
+
+def _dense_jet(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               activation: str | None, impl: str) -> jnp.ndarray:
+    """One dense layer (+ optional activation) on a raw coefficient stack."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.jet_dense(coeffs, w, b, activation)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r} (want 'jnp' or 'pallas')")
+    out = J.linear(J.Jet(coeffs), w, b)
+    if activation is not None:
+        out = J.compose(out, activation)
+    return out.coeffs
+
+
+# ---------------------------------------------------------------------------
+# DenseMLP: the paper's architecture, over the seed MLPParams pytree
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DenseMLP:
+    """Uniform-width MLP; params are the seed :class:`MLPParams` NamedTuple,
+    so everything that holds an ``MLPParams`` works unchanged."""
+
+    d_in: int
+    width: int
+    depth: int
+    d_out: int
+    activation: str = "tanh"
+
+    @classmethod
+    def from_params(cls, params: MLPParams, activation: str = "tanh") -> "DenseMLP":
+        """Recover the architecture from a parameter pytree (the deprecation
+        shim for every pre-engine call site that only has the NamedTuple)."""
+        return cls(d_in=params.w_in.shape[0], width=params.w_in.shape[1],
+                   depth=params.w_hidden.shape[0] + 1,
+                   d_out=params.w_out.shape[1], activation=activation)
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> MLPParams:
+        return init_mlp(key, self.d_in, self.width, self.depth, self.d_out,
+                        dtype=dtype)
+
+    def apply(self, params: MLPParams, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return mlp_apply(params, x, self.activation, unroll=unroll)
+
+    def jet_apply(self, params: MLPParams, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        return ntp_jet(params, jet, activation=self.activation, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# MLP: variable per-layer widths
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MLP:
+    """Fully-connected net with arbitrary layer widths.
+
+    ``widths = (d_in, h_1, ..., h_L, d_out)``; params are a tuple of (w, b)
+    pairs, one per layer.  Hidden layers are activated, the last is linear.
+    """
+
+    widths: Tuple[int, ...]
+    activation: str = "tanh"
+
+    def __post_init__(self):
+        if len(self.widths) < 2:
+            raise ValueError("MLP needs at least (d_in, d_out) widths")
+
+    @property
+    def d_in(self) -> int:
+        return self.widths[0]
+
+    @property
+    def d_out(self) -> int:
+        return self.widths[-1]
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        ks = jax.random.split(key, len(self.widths) - 1)
+        return tuple((xavier_uniform(k, fi, fo, dtype), jnp.zeros((fo,), dtype))
+                     for k, fi, fo in zip(ks, self.widths[:-1], self.widths[1:]))
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        act = PRIMALS[self.activation]
+        h = x
+        for w, b in params[:-1]:
+            h = act(h @ w + b)
+        w, b = params[-1]
+        return h @ w + b
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        coeffs = jet.coeffs
+        for w, b in params[:-1]:
+            coeffs = _dense_jet(coeffs, w, b, self.activation, impl)
+        w, b = params[-1]
+        return J.Jet(_dense_jet(coeffs, w, b, None, impl))
+
+
+# ---------------------------------------------------------------------------
+# ResidualMLP: skip connections (jet addition is exact)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ResidualMLP:
+    """``h_0 = act(W_in x + b_in)``; ``h_j = h_{j-1} + act(W_j h_{j-1} + b_j)``
+    for ``depth`` blocks; linear readout.  Residual adds are coefficient-wise
+    on the jet, so the derivative cost matches the plain MLP layer-for-layer.
+    """
+
+    d_in: int
+    width: int
+    depth: int
+    d_out: int
+    activation: str = "tanh"
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        ks = jax.random.split(key, self.depth + 2)
+        return {
+            "w_in": xavier_uniform(ks[0], self.d_in, self.width, dtype),
+            "b_in": jnp.zeros((self.width,), dtype),
+            "blocks": tuple(
+                (xavier_uniform(ks[1 + j], self.width, self.width, dtype),
+                 jnp.zeros((self.width,), dtype)) for j in range(self.depth)),
+            "w_out": xavier_uniform(ks[-1], self.width, self.d_out, dtype),
+            "b_out": jnp.zeros((self.d_out,), dtype),
+        }
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        act = PRIMALS[self.activation]
+        h = act(x @ params["w_in"] + params["b_in"])
+        for w, b in params["blocks"]:
+            h = h + act(h @ w + b)
+        return h @ params["w_out"] + params["b_out"]
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        coeffs = _dense_jet(jet.coeffs, params["w_in"], params["b_in"],
+                            self.activation, impl)
+        for w, b in params["blocks"]:
+            coeffs = coeffs + _dense_jet(coeffs, w, b, self.activation, impl)
+        return J.Jet(_dense_jet(coeffs, params["w_out"], params["b_out"],
+                                None, impl))
+
+
+# ---------------------------------------------------------------------------
+# FourierFeatureMLP: random-feature embedding against spectral bias
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FourierFeatureMLP:
+    """``gamma(x) = [sin(2pi B x), cos(2pi B x)]`` with fixed Gaussian
+    ``B ~ N(0, scale^2)`` of shape (d_in, n_features), then an MLP trunk on
+    the 2*n_features embedding (Tancik et al. 2020; the standard PINN cure
+    for spectral bias).  B is excluded from gradients (stop_gradient), and
+    the embedding jet is exact: ``sin`` composes through Faa di Bruno and
+    ``cos z = sin(z + pi/2)`` reuses the same table.
+    """
+
+    d_in: int
+    width: int
+    depth: int
+    d_out: int
+    n_features: int = 16
+    feature_scale: float = 1.0
+    activation: str = "tanh"
+
+    def _trunk(self) -> MLP:
+        widths = (2 * self.n_features,) + (self.width,) * self.depth \
+            + (self.d_out,)
+        return MLP(widths, self.activation)
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        kb, km = jax.random.split(key)
+        B = self.feature_scale * jax.random.normal(
+            kb, (self.d_in, self.n_features), dtype)
+        return {"B": B, "mlp": self._trunk().init(km, dtype)}
+
+    def _freqs(self, params: Params) -> jnp.ndarray:
+        return 2.0 * math.pi * jax.lax.stop_gradient(params["B"])
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        z = x @ self._freqs(params)
+        feats = jnp.concatenate([jnp.sin(z), jnp.cos(z)], axis=-1)
+        return self._trunk().apply(params["mlp"], feats, unroll=unroll)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        z = J.linear(jet, self._freqs(params))
+        s = J.compose(z, "sin")
+        c = J.compose(J.add(z, 0.5 * math.pi), "sin")   # cos z = sin(z + pi/2)
+        feats = J.jmap(lambda a, b: jnp.concatenate([a, b], axis=-1), s, c)
+        return self._trunk().jet_apply(params["mlp"], feats, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# registry: named factories for configs / CLIs
+# ---------------------------------------------------------------------------
+
+NetworkFactory = Callable[..., Network]
+
+_NETWORKS: Dict[str, NetworkFactory] = {}
+
+
+def register_network(name: str, factory: NetworkFactory) -> None:
+    if name in _NETWORKS:
+        raise ValueError(f"network {name!r} already registered")
+    _NETWORKS[name] = factory
+
+
+def network_names() -> Tuple[str, ...]:
+    return tuple(sorted(_NETWORKS))
+
+
+def make_network(kind: str, *, d_in: int, d_out: int, width: int, depth: int,
+                 activation: str = "tanh", **kwargs) -> Network:
+    """Build a registered network from the uniform (width, depth) vocabulary
+    used by configs and CLIs; extra kwargs go to the factory."""
+    if kind not in _NETWORKS:
+        raise KeyError(f"unknown network {kind!r}; known: {network_names()}")
+    return _NETWORKS[kind](d_in=d_in, d_out=d_out, width=width, depth=depth,
+                           activation=activation, **kwargs)
+
+
+register_network("dense", DenseMLP)
+register_network("mlp", lambda *, d_in, d_out, width, depth, activation="tanh",
+                 **kw: MLP((d_in,) + (width,) * depth + (d_out,), activation))
+register_network("residual", ResidualMLP)
+register_network("fourier", FourierFeatureMLP)

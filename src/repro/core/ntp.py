@@ -19,10 +19,7 @@ paper's "backward pass" and stays O(n p(n) M).
 
 from __future__ import annotations
 
-import itertools
-import math
-from functools import partial
-from typing import Any, List, NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,14 +38,20 @@ class MLPParams(NamedTuple):
     b_out: jnp.ndarray   # (d_out,)
 
 
+def xavier_uniform(key: jax.Array, fan_in: int, fan_out: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    """Xavier-uniform weight init matching the paper's PyTorch defaults
+    (shared by every architecture in core/network.py)."""
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out)).astype(dtype)
+    return jax.random.uniform(key, (fan_in, fan_out), dtype, -lim, lim)
+
+
 def init_mlp(key: jax.Array, d_in: int, width: int, depth: int, d_out: int,
              dtype=jnp.float32) -> MLPParams:
-    """Xavier-uniform init matching the paper's PyTorch defaults."""
     ks = jax.random.split(key, depth + 1)
 
     def xavier(k, fan_in, fan_out):
-        lim = jnp.sqrt(6.0 / (fan_in + fan_out)).astype(dtype)
-        return jax.random.uniform(k, (fan_in, fan_out), dtype, -lim, lim)
+        return xavier_uniform(k, fan_in, fan_out, dtype)
 
     w_in = xavier(ks[0], d_in, width)
     wh = jnp.stack([xavier(ks[i + 1], width, width) for i in range(depth - 1)]) \
@@ -91,20 +94,14 @@ def mlp_apply(params: MLPParams, x: jnp.ndarray, activation: str = "tanh",
 # the n-TangentProp forward pass
 # ---------------------------------------------------------------------------
 
-def ntp_forward(params: MLPParams, x: jnp.ndarray, order: int,
-                tangent: jnp.ndarray | None = None, activation: str = "tanh",
-                impl: str = "jnp") -> J.Jet:
-    """Jet of the network output along the input curve ``x + t v``.
+def ntp_jet(params: MLPParams, jet: J.Jet, activation: str = "tanh",
+            impl: str = "jnp") -> J.Jet:
+    """Push an input jet through the dense stack (the body of Algorithm 1).
 
-    ``x``: (batch, d_in).  ``tangent`` defaults to ones (the paper's 1-D PINN
-    seeding ``y_1 = L_1(1) - b_1``).  Returns a Jet of (batch, d_out).
+    This is the ``Network.jet_apply`` of the paper's architecture; it is
+    split out from :func:`ntp_forward` so :class:`repro.core.network.DenseMLP`
+    can run arbitrary pre-seeded jets through the same code path.
     """
-    if order == 0:
-        y = mlp_apply(params, x, activation)
-        return J.Jet(y[None])
-
-    jet = J.seed(x, tangent, order)
-
     if impl == "pallas":
         from repro.kernels import ops as kops
         coeffs = kops.jet_dense(jet.coeffs, params.w_in, params.b_in, activation)
@@ -132,6 +129,20 @@ def ntp_forward(params: MLPParams, x: jnp.ndarray, order: int,
     return J.linear(jet, params.w_out, params.b_out)
 
 
+def ntp_forward(params: MLPParams, x: jnp.ndarray, order: int,
+                tangent: jnp.ndarray | None = None, activation: str = "tanh",
+                impl: str = "jnp") -> J.Jet:
+    """Jet of the network output along the input curve ``x + t v``.
+
+    ``x``: (batch, d_in).  ``tangent`` defaults to ones (the paper's 1-D PINN
+    seeding ``y_1 = L_1(1) - b_1``).  Returns a Jet of (batch, d_out).
+    """
+    if order == 0:
+        y = mlp_apply(params, x, activation)
+        return J.Jet(y[None])
+    return ntp_jet(params, J.seed(x, tangent, order), activation, impl)
+
+
 def ntp_derivatives(params: MLPParams, x: jnp.ndarray, order: int,
                     tangent: jnp.ndarray | None = None, activation: str = "tanh",
                     impl: str = "jnp") -> jnp.ndarray:
@@ -141,22 +152,16 @@ def ntp_derivatives(params: MLPParams, x: jnp.ndarray, order: int,
 
 # ---------------------------------------------------------------------------
 # multi-directional jets: full nabla^k for small input dimension d
+#
+# The direction folding and polarization algebra are engine- and network-
+# generic; they live in core/engines.py.  These wrappers keep the seed
+# MLPParams surface (and its callers/tests) working verbatim.
 # ---------------------------------------------------------------------------
 
-def _batched_directional(params: MLPParams, x: jnp.ndarray, dirs: jnp.ndarray,
-                         order: int, activation: str, impl: str) -> jnp.ndarray:
-    """Raw derivatives along each row of ``dirs``: (n_dirs, order+1, batch, d_out).
-
-    Folds the direction axis into the batch so both impls see ONE large jet
-    forward (a single Pallas launch / one stacked GEMM per layer) instead of a
-    vmap over per-direction passes.
-    """
-    n_dirs = dirs.shape[0]
-    batch = x.shape[0]
-    xt = jnp.tile(x, (n_dirs, 1))
-    vt = jnp.repeat(dirs, batch, axis=0)
-    derivs = ntp_derivatives(params, xt, order, vt, activation, impl)
-    return jnp.moveaxis(derivs.reshape((order + 1, n_dirs, batch, -1)), 1, 0)
+def _dense_view(params: MLPParams, activation: str, impl: str):
+    from .engines import NTPEngine
+    from .network import DenseMLP
+    return DenseMLP.from_params(params, activation), NTPEngine(impl)
 
 
 def ntp_grid(params: MLPParams, x: jnp.ndarray, order: int, activation: str = "tanh",
@@ -167,8 +172,8 @@ def ntp_grid(params: MLPParams, x: jnp.ndarray, order: int, activation: str = "t
     derivatives per axis; mixed partials are recovered by polarization of
     directional jets -- see :func:`cross`.
     """
-    eye = jnp.eye(x.shape[-1], dtype=x.dtype)
-    return _batched_directional(params, x, eye, order, activation, impl)
+    net, engine = _dense_view(params, activation, impl)
+    return engine.grid(net, params, x, order)
 
 
 def cross(params: MLPParams, x: jnp.ndarray, axes: Sequence[int],
@@ -184,16 +189,5 @@ def cross(params: MLPParams, x: jnp.ndarray, axes: Sequence[int],
     nabla^m tensor from 2^m directional jets -- still one n-TangentProp batch,
     never a nested-autodiff graph.
     """
-    m = len(axes)
-    d = x.shape[-1]
-    if m == 0:
-        raise ValueError("axes must name at least one differentiation axis")
-    if any(a < 0 or a >= d for a in axes):
-        raise ValueError(f"axes {tuple(axes)} out of range for d_in={d}")
-    signs = jnp.asarray(list(itertools.product((1.0, -1.0), repeat=m)), x.dtype)
-    basis = jnp.eye(d, dtype=x.dtype)[jnp.asarray(axes)]      # (m, d)
-    dirs = signs @ basis                                       # (2^m, d)
-    derivs = _batched_directional(params, x, dirs, m, activation, impl)
-    coefs = jnp.prod(signs, axis=1)                            # (2^m,)
-    top = jnp.tensordot(coefs, derivs[:, m], axes=1)           # (batch, d_out)
-    return top / (2.0 ** m * math.factorial(m))
+    net, engine = _dense_view(params, activation, impl)
+    return engine.cross(net, params, x, axes)

@@ -16,9 +16,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .jet_dense import jet_dense_pallas
+from .tanh_jet import KERNEL_ACTS as _KERNEL_ACTS
 from .tanh_jet import act_jet_pallas
-
-_KERNEL_ACTS = ("tanh", "sigmoid")
 
 
 def _on_tpu() -> bool:

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.activations import sin_taylor_stack
+
 from .bell_tables import fdb_terms, sigmoid_poly_rows, tanh_poly_rows
 
 _POLY_ROWS = {"tanh": tanh_poly_rows, "sigmoid": sigmoid_poly_rows}
@@ -17,7 +19,11 @@ _PRIMAL = {"tanh": jnp.tanh, "sigmoid": lambda a: 0.5 * (jnp.tanh(0.5 * a) + 1.0
 
 
 def _taylor_stack(a: jnp.ndarray, n: int, activation: str) -> list[jnp.ndarray]:
-    """[sigma^(m)(a)/m! for m in 0..n] via Horner on the closed-form polys."""
+    """[sigma^(m)(a)/m! for m in 0..n] via Horner on the closed-form polys
+    (tanh/sigmoid) or core.activations' sin phase cycle (same closed form the
+    in-kernel stack hardcodes; only the polynomial tables stay independent)."""
+    if activation == "sin":
+        return list(sin_taylor_stack(a, n))
     u = _PRIMAL[activation](a)
     rows = _POLY_ROWS[activation](n)
     out = []

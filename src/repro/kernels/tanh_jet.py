@@ -23,17 +23,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import math
+
 from .bell_tables import fdb_terms, sigmoid_poly_rows, tanh_poly_rows
 
 _POLY_ROWS = {"tanh": tanh_poly_rows, "sigmoid": sigmoid_poly_rows}
-
-
-def _primal(activation: str, a: jnp.ndarray) -> jnp.ndarray:
-    if activation == "tanh":
-        return jnp.tanh(a)
-    if activation == "sigmoid":
-        return 0.5 * (jnp.tanh(0.5 * a) + 1.0)
-    raise ValueError(activation)
+KERNEL_ACTS = ("tanh", "sigmoid", "sin")
 
 
 def _horner(row, u):
@@ -43,15 +38,33 @@ def _horner(row, u):
     return acc
 
 
+def _taylor_stack(z0: jnp.ndarray, n: int, activation: str) -> list:
+    """F_m = sigma^(m)(z0)/m! for m = 0..n, as pure VPU work.
+
+    tanh/sigmoid evaluate one transcendental then static Horner chains in it;
+    sin cycles sigma^(m)(a) = sin(a + m pi/2) through two transcendentals and
+    sign flips (the SIREN / Fourier-feature trunk activation)."""
+    if activation == "sin":
+        s, c = jnp.sin(z0), jnp.cos(z0)
+        cycle = (s, c, -s, -c)
+        return [cycle[m % 4] * (1.0 / math.factorial(m)) for m in range(n + 1)]
+    if activation == "tanh":
+        u = jnp.tanh(z0)
+    elif activation == "sigmoid":
+        u = 0.5 * (jnp.tanh(0.5 * z0) + 1.0)
+    else:
+        raise ValueError(activation)
+    rows_tab = _POLY_ROWS[activation](n)
+    return [_horner(rows_tab[m], u) for m in range(n + 1)]
+
+
 def act_jet_body(z: jnp.ndarray, activation: str) -> jnp.ndarray:
     """The jet epilogue on an in-register/in-VMEM stack ``z`` of shape (n+1, ...).
 
     Shared by this kernel and jet_dense's epilogue so both are tested by the
     same sweeps."""
     n = z.shape[0] - 1
-    rows_tab = _POLY_ROWS[activation](n)
-    u = _primal(activation, z[0])
-    f = [_horner(rows_tab[m], u) for m in range(n + 1)]
+    f = _taylor_stack(z[0], n, activation)
     out = [f[0]]
     for k, terms in enumerate(fdb_terms(n), start=1):
         acc = None

@@ -50,8 +50,8 @@ def init_moe(mk: Maker, cfg: ArchConfig) -> Params:
 DISPATCH_GROUPS = 32  # = pod x data shards; local dispatch per group
 
 
-def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray
-              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+              training: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, D) -> (y, aux_loss).
 
     Dispatch is *group-local*: tokens are split into DISPATCH_GROUPS groups
@@ -59,7 +59,15 @@ def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray
     (E, cap_g) buffer.  The buffer carries both a group dim (sharded like
     batch) and an expert dim (sharded over "model" for EP), so routing
     arithmetic never crosses shards; only the expert einsum's implicit
-    all-to-all moves tokens (GSPMD inserts it on the E axis)."""
+    all-to-all moves tokens (GSPMD inserts it on the E axis).
+
+    Capacity-factor drops are *training-only* load shaping: with
+    ``training=False`` (inference: full forward, prefill, decode) dispatch is
+    dropless (cap = n_loc, the per-expert worst case, since top-k indices
+    are distinct per token), so the logits of a sequence routed jointly are
+    identical to the same tokens decoded one at a time -- a lone decode
+    token never contends for capacity, so any inference-time drop would
+    break prefill+decode == full-forward parity."""
     b, s, d = x.shape
     e, k = cfg.moe.n_experts, cfg.moe.top_k
     n = b * s
@@ -67,7 +75,11 @@ def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray
     while n % g:
         g //= 2
     n_loc = n // g
-    cap = max(1, min(int(math.ceil(n_loc * k / e * cfg.moe.capacity_factor)), n_loc))
+    if training:
+        cap = max(1, min(int(math.ceil(n_loc * k / e * cfg.moe.capacity_factor)),
+                         n_loc))
+    else:
+        cap = n_loc  # dropless: an expert can receive at most n_loc tokens
 
     xf = x.reshape(g, n_loc, d)
     xf = shard(xf, "batch", None, None)

@@ -134,7 +134,7 @@ def init_model(cfg: ArchConfig, key: jax.Array | None = None,
 def _sublayer_seq(lp: Params, cfg: ArchConfig, x: jnp.ndarray, j: int,
                   knobs: Knobs, *, causal: bool = True,
                   enc_out: jnp.ndarray | None = None,
-                  collect_kv: bool = False):
+                  collect_kv: bool = False, training: bool = False):
     """One layer.  Returns (x, kv, xkv, aux); kv/xkv None unless collected."""
     aux = jnp.zeros((), jnp.float32)
     if cfg.block_type == "mamba2":
@@ -176,7 +176,7 @@ def _sublayer_seq(lp: Params, cfg: ArchConfig, x: jnp.ndarray, j: int,
         # batch-align the dispatch input here: S-sharded residuals hitting
         # the grouped dispatch otherwise reshard via per-layer all-to-alls
         h = shard(h, "batch", None, None)
-        f_out, aux = moe_mod.apply_moe(lp["moe"], cfg, h)
+        f_out, aux = moe_mod.apply_moe(lp["moe"], cfg, h, training=training)
     else:
         f_out = apply_mlp_block(lp["ffn"], cfg, h)
     x = x + f_out
@@ -185,7 +185,8 @@ def _sublayer_seq(lp: Params, cfg: ArchConfig, x: jnp.ndarray, j: int,
 
 def _stack_seq(stack: Params, cfg: ArchConfig, x: jnp.ndarray, knobs: Knobs,
                *, causal: bool = True, enc_out: jnp.ndarray | None = None,
-               shared: Params | None = None, collect_kv: bool = False):
+               shared: Params | None = None, collect_kv: bool = False,
+               training: bool = False):
     """Scan over groups + unrolled rest.
 
     Returns (x, aux, collected) with collected = dict of stacked kv pytrees
@@ -199,7 +200,8 @@ def _stack_seq(stack: Params, cfg: ArchConfig, x: jnp.ndarray, knobs: Knobs,
         for j in range(g):
             x, kv, xkv, a = _sublayer_seq(gparams["layers"][j], cfg, x, j, knobs,
                                           causal=causal, enc_out=enc_out,
-                                          collect_kv=collect_kv)
+                                          collect_kv=collect_kv,
+                                          training=training)
             aux = aux + a
             if collect_kv:
                 kvs.append(kv)
@@ -227,7 +229,7 @@ def _stack_seq(stack: Params, cfg: ArchConfig, x: jnp.ndarray, knobs: Knobs,
     for r, lp in enumerate(stack["rest"]):
         x, kv, xkv, a = _sublayer_seq(lp, cfg, x, (cfg.n_layers // g) * g + r,
                                       knobs, causal=causal, enc_out=enc_out,
-                                      collect_kv=collect_kv)
+                                      collect_kv=collect_kv, training=training)
         aux = aux + a
         if collect_kv:
             rest_kvs.append(kv)
@@ -259,13 +261,17 @@ def _fuse_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
 
 
 def forward_seq(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
-                knobs: Knobs = Knobs(), collect_kv: bool = False):
+                knobs: Knobs = Knobs(), collect_kv: bool = False,
+                training: bool = False):
+    """``training`` gates training-only load shaping (MoE capacity drops);
+    inference callers (prefill, eval forwards) keep the default False so the
+    sequence forward is token-order-equivalent to step-wise decode."""
     x, enc_out, n_prefix = _fuse_inputs(params, cfg, batch, knobs)
     x = shard(x, "batch", None, None)
     shared = params.get("shared") if cfg.hybrid_shared_attn_every else None
     x, aux, collected = _stack_seq(params["stack"], cfg, x, knobs, causal=True,
                                    enc_out=enc_out, shared=shared,
-                                   collect_kv=collect_kv)
+                                   collect_kv=collect_kv, training=training)
     x = rms_norm(x, params["final_norm"])
     return x, aux, n_prefix, collected
 
@@ -288,7 +294,7 @@ def _ce_of_chunk(params, cfg, xc, tc):
 
 def train_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
                knobs: Knobs = Knobs()):
-    x, aux, n_prefix, _ = forward_seq(params, cfg, batch, knobs)
+    x, aux, n_prefix, _ = forward_seq(params, cfg, batch, knobs, training=True)
     tokens = batch["tokens"]
     if n_prefix:
         x = x[:, n_prefix:]

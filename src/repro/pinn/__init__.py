@@ -5,8 +5,10 @@ from .burgers import (exact_profile, lambda_window, profile_lambda,
                       residual_derivs_autodiff, residual_jet, smoothness_order)
 from .losses import (LossWeights, bc_targets, burgers_pinn_loss, pinn_loss,
                      residual_jet_u)
-from .operators import (Operator, autodiff_pure_derivs_fn, burgers_operator,
+from .operators import (DerivTable, Operator, autodiff_mixed_partial_fn,
+                        autodiff_pure_derivs_fn, build_table, burgers_operator,
                         get_operator, ntp_pure_derivs, operator_names,
-                        register, residual_of_fn, residual_values)
+                        register, residual_of_fn, residual_values,
+                        resolve_net_engine)
 from .trainer import (OperatorResult, OperatorRunConfig, PINNResult,
                       PINNRunConfig, train, train_operator)

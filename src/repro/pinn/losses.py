@@ -2,10 +2,12 @@
 
 ``pinn_loss`` is the operator-generic objective: residual MSE over interior
 collocation points plus boundary/initial supervision against the operator's
-exact solution, with the derivative engine ("ntp" quasilinear vs "autodiff"
-baseline) and kernel impl ("jnp" vs "pallas") as free axes.  The self-similar
-Burgers workload keeps its specialized objective (learnable lambda, Sobolev
-term, high-order origin smoothness -- paper eq. 1, 2 and appendix A) as
+exact solution, generic over the :class:`DerivativeEngine` (``NTPEngine``
+quasilinear vs ``AutodiffEngine`` baseline, by object or spec string) and
+the :class:`Network` (``net=``; defaults to the :class:`DenseMLP` view of a
+bare ``MLPParams`` for backward compatibility).  The self-similar Burgers
+workload keeps its specialized objective (learnable lambda, Sobolev term,
+high-order origin smoothness -- paper eq. 1, 2 and appendix A) as
 ``burgers_pinn_loss``; its residual algebra is also registered in the
 operator registry as ``"burgers"``.
 """
@@ -19,10 +21,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import jet as J
+from repro.core.engines import DerivativeEngine
+from repro.core.network import Network
 from repro.core.ntp import MLPParams, mlp_apply
 
 from .burgers import exact_profile, residual_derivs_autodiff, residual_jet
-from .operators import Operator, get_operator, residual_values
+from .operators import Operator, build_table, get_operator, resolve_net_engine
 
 
 @dataclass(frozen=True)
@@ -37,24 +41,33 @@ class LossWeights:
 # generic operator objective
 # ---------------------------------------------------------------------------
 
-def pinn_loss(params: MLPParams, *, op: Union[Operator, str], pts: jnp.ndarray,
+def pinn_loss(params, *, op: Union[Operator, str], pts: jnp.ndarray,
               bc_pts: jnp.ndarray, bc_vals: jnp.ndarray,
-              weights: LossWeights = LossWeights(), engine: str = "ntp",
-              impl: str = "jnp",
-              activation: str = "tanh") -> Tuple[jnp.ndarray, Dict]:
+              weights: LossWeights = LossWeights(),
+              engine: Union[str, DerivativeEngine] = "ntp",
+              impl: str = "jnp", activation: str = "tanh",
+              net: Network | None = None) -> Tuple[jnp.ndarray, Dict]:
     """Operator-generic PINN objective: w_r ||R[u]||^2 + w_bc ||u - u*||^2_bd.
 
     ``bc_vals`` is the exact solution on ``bc_pts`` -- precompute it outside
     jit (``op.exact`` may be numpy-backed, e.g. the Burgers profile).  Only
-    ``engine``/``impl`` change the derivative machinery; the loss surface is
-    identical across them (the paper's "exact method" property).
+    ``engine``/``net`` change the derivative machinery and architecture; the
+    loss surface is identical across engines (the paper's "exact method"
+    property).  Scalar networks only: a vector-valued ``net`` (d_out > 1)
+    raises instead of silently supervising the first output component.
     """
     if isinstance(op, str):
         op = get_operator(op)
-    r = residual_values(params, op, pts, engine=engine,
-                        activation=activation, impl=impl)
+    net, eng = resolve_net_engine(params, net, engine, impl, activation)
+    if net.d_out != 1:
+        raise ValueError(
+            "pinn_loss supervises a scalar field u but the network has "
+            f"d_out={net.d_out}; slicing [:, 0] would silently drop the other "
+            "components.  Use a d_out=1 network (vector-valued PDE systems "
+            "are a ROADMAP item).")
+    r = op.residual(pts, build_table(net, params, eng, op, pts))
     l_res = jnp.mean(r ** 2)
-    ub = mlp_apply(params, bc_pts, activation)[:, 0]
+    ub = net.apply(params, bc_pts)[:, 0]
     l_bc = jnp.mean((ub - bc_vals) ** 2)
     loss = weights.residual * l_res + weights.bc * l_bc
     return loss, {"residual": l_res, "bc": l_bc}
@@ -63,6 +76,21 @@ def pinn_loss(params: MLPParams, *, op: Union[Operator, str], pts: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # the self-similar Burgers objective (paper section IV-C)
 # ---------------------------------------------------------------------------
+
+def _burgers_engine(engine: Union[str, DerivativeEngine],
+                    impl: str) -> Tuple[str, str]:
+    """The specialized Burgers jet pipeline predates the engine objects;
+    normalize any accepted engine form back to its ("ntp"|"autodiff", impl)
+    string pair."""
+    from repro.core.engines import AutodiffEngine, NTPEngine, resolve_engine
+    eng = resolve_engine(engine, impl)
+    if isinstance(eng, NTPEngine):
+        return "ntp", eng.impl
+    if isinstance(eng, AutodiffEngine):
+        return "autodiff", impl
+    raise ValueError(f"burgers objective supports the ntp and autodiff "
+                     f"engines, not {eng.spec!r}")
+
 
 def bc_targets(k: int, domain: float) -> Tuple[float, float]:
     """U_true(+-L) with the C=1 normalization."""
@@ -78,8 +106,10 @@ def burgers_pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
                       impl: str = "jnp", activation: str = "tanh",
                       bc_vals: Tuple[float, float] = None) -> Tuple[jnp.ndarray, Dict]:
     """Full self-similar Burgers objective.  ``engine``: "ntp" (quasilinear,
-    ours) or "autodiff" (the paper's baseline).  Everything else is identical,
-    so the benchmark isolates the derivative engine."""
+    ours) or "autodiff" (the paper's baseline), as a string, spec
+    ("ntp/pallas"), or :class:`DerivativeEngine` instance.  Everything else
+    is identical, so the benchmark isolates the derivative engine."""
+    engine, impl = _burgers_engine(engine, impl)
     lo, hi = lam_window
     lam = lo + (hi - lo) * jax.nn.sigmoid(lam_raw)
 

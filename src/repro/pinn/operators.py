@@ -1,54 +1,86 @@
 """Differential-operator subsystem: PDE residuals as jet-primitive compositions.
 
-n-TangentProp turns "evaluate u and its pure derivatives at collocation
-points" into one quasilinear jet forward per coordinate axis (core/ntp.py).
-This module layers a small abstraction on top so a PDE residual is written
-ONCE against a derivative table and runs through every engine:
+n-TangentProp turns "evaluate u and its derivatives at collocation points"
+into one quasilinear jet forward per direction (core/engines.py).  This
+module layers a small abstraction on top so a PDE residual is written ONCE
+against a derivative table and runs through every
+:class:`repro.core.engines.DerivativeEngine` and every jet-traceable
+:class:`repro.core.network.Network`:
 
-* ``engine="ntp"``      -- per-axis jets via :func:`repro.core.ntp.ntp_grid`
-                           (``impl="jnp"`` reference or ``impl="pallas"``
-                           fused kernels);
-* ``engine="autodiff"`` -- nested ``jax.grad`` towers (the paper's baseline);
+* ``residual_values(params, op, x, engine=NTPEngine("pallas"), net=...)`` --
+  any engine (ntp jnp/pallas, autodiff baseline, jax.experimental.jet
+  oracle) x any network (DenseMLP, MLP, ResidualMLP, FourierFeatureMLP);
 * the same residual applied to an *analytic* function via
   :func:`residual_of_fn` -- which is how each operator's manufactured/exact
   solution becomes a test oracle (method of manufactured solutions: the
   residual of the exact solution must vanish identically).
 
-An :class:`Operator` declares its input dimension, the highest pure-derivative
-order it consumes, a residual ``R(x, d)`` where ``d(axis, k)`` returns the
-k-th pure derivative of u along ``axis`` at every collocation point, and an
-exact solution over its default domain box.  Registered operators:
+The pre-redesign string keywords (``engine="ntp", impl="pallas",
+activation="tanh"`` on a bare ``MLPParams``) still work through
+:func:`resolve_net_engine` for one release.
 
-===========  ====  =====  ==========================================
-name         d_in  order  residual
-===========  ====  =====  ==========================================
-heat          2     2     u_t - nu u_xx
-wave          2     2     u_tt - c^2 u_xx
-kdv           2     3     u_t + 6 u u_x + u_xxx
-allen-cahn    2     2     u_t - eps u_xx + u^3 - u - f(t, x)
-poisson2d     2     2     u_xx + u_yy - f(x, y)
-burgers       1     1     -lam u + ((1 + lam) x + u) u'  (self-similar ODE)
-===========  ====  =====  ==========================================
+An :class:`Operator` declares its input dimension, the highest pure-
+derivative order it consumes, the mixed partials it needs (``mixed``, a
+tuple of axis tuples -- served through polarization, ``engine.cross``), a
+residual ``R(x, d)`` where ``d(axis, k)`` returns the k-th pure derivative
+and ``d.mixed(*axes)`` a declared mixed partial, and an exact solution over
+its default domain box.  Registered operators:
 
-Mixed partials, when an operator needs them, come from the polarization
-helper :func:`repro.core.ntp.cross` -- still 2^m directional jets, never a
-nested-autodiff graph.  New PDEs register with :func:`register`; see
-README.md for a walkthrough.
+===================  ====  =====  ========================================
+name                 d_in  order  residual
+===================  ====  =====  ========================================
+heat                  2     2     u_t - nu u_xx
+wave                  2     2     u_tt - c^2 u_xx
+kdv                   2     3     u_t + 6 u u_x + u_xxx
+allen-cahn            2     2     u_t - eps u_xx + u^3 - u - f(t, x)
+poisson2d             2     2     u_xx + u_yy - f(x, y)
+advection-diffusion   3     2     u_t + a.grad u - div(D grad u) - f, with
+                                  rotated anisotropic D (genuine u_xy term)
+burgers               1     1     -lam u + ((1 + lam) x + u) u'  (self-
+                                  similar ODE)
+===================  ====  =====  ========================================
+
+New PDEs register with :func:`register`; see README.md for a walkthrough.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ntp import MLPParams, mlp_apply, ntp_grid
+from repro.core.engines import DerivativeEngine, resolve_engine
+from repro.core.network import DenseMLP, Network
+from repro.core.ntp import MLPParams
 
-# d(axis, k) -> (N,) raw k-th pure derivative of u along axis
-DerivTable = Callable[[int, int], jnp.ndarray]
+
+class DerivTable:
+    """Pointwise derivative lookup handed to ``Operator.residual``.
+
+    ``d(axis, k)`` -> (N,) raw k-th pure derivative of u along input ``axis``;
+    ``d.mixed(*axes)`` -> (N,) mixed partial for an axis tuple the operator
+    declared in ``Operator.mixed`` (order within the tuple is irrelevant:
+    partials commute for smooth networks).
+    """
+
+    def __init__(self, pure: jnp.ndarray,
+                 mixed: Dict[Tuple[int, ...], jnp.ndarray] | None = None):
+        self._pure = pure               # (d_in, order+1, N)
+        self._mixed = mixed or {}
+
+    def __call__(self, axis: int, k: int) -> jnp.ndarray:
+        return self._pure[axis, k]
+
+    def mixed(self, *axes: int) -> jnp.ndarray:
+        key = tuple(sorted(axes))
+        if key not in self._mixed:
+            raise KeyError(
+                f"mixed partial {key} was not precomputed; declare it in the "
+                f"operator's ``mixed=`` field (have: {tuple(self._mixed)})")
+        return self._mixed[key]
 
 
 @dataclass(frozen=True)
@@ -56,10 +88,12 @@ class Operator:
     """A differential operator with a manufactured/exact solution oracle.
 
     ``residual(x, d)`` consumes collocation points ``x`` of shape
-    (N, d_in) and a :data:`DerivTable`; it returns the pointwise residual
-    (N,).  ``exact(x)`` is the solution the residual vanishes on; it doubles
-    as boundary/initial data for training and as the accuracy oracle in
-    tests.  ``differentiable_exact`` is False when ``exact`` is not a pure
+    (N, d_in) and a :class:`DerivTable`; it returns the pointwise residual
+    (N,).  ``mixed`` lists the axis tuples of every ``d.mixed(...)`` lookup
+    the residual performs, so engines can precompute them (one polarization
+    batch each).  ``exact(x)`` is the solution the residual vanishes on; it
+    doubles as boundary/initial data for training and as the accuracy oracle
+    in tests.  ``differentiable_exact`` is False when ``exact`` is not a pure
     jax function (e.g. the Burgers profile's bisection inversion), which
     excludes it from autodiff-based oracle checks only.
     """
@@ -72,6 +106,7 @@ class Operator:
     domain: Tuple[Tuple[float, float], ...]
     description: str = ""
     differentiable_exact: bool = True
+    mixed: Tuple[Tuple[int, ...], ...] = ()
 
 
 _REGISTRY: Dict[str, Operator] = {}
@@ -83,6 +118,10 @@ def register(op: Operator) -> Operator:
     if len(op.domain) != op.d_in:
         raise ValueError(f"operator {op.name!r}: domain rank {len(op.domain)} "
                          f"!= d_in {op.d_in}")
+    for axes in op.mixed:
+        if any(a < 0 or a >= op.d_in for a in axes):
+            raise ValueError(f"operator {op.name!r}: mixed axes {axes} out of "
+                             f"range for d_in={op.d_in}")
     _REGISTRY[op.name] = op
     return op
 
@@ -98,20 +137,64 @@ def operator_names() -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
-# derivative-table engines
+# network/engine resolution (the deprecation shim) and residual assembly
 # ---------------------------------------------------------------------------
 
-def ntp_pure_derivs(params: MLPParams, x: jnp.ndarray, order: int,
-                    activation: str = "tanh", impl: str = "jnp") -> jnp.ndarray:
-    """(d_in, order+1, N) raw pure derivatives of the network, one jet batch."""
-    return ntp_grid(params, x, order, activation, impl)[..., 0]
+def resolve_net_engine(params, net: Network | None,
+                       engine: Union[str, DerivativeEngine],
+                       impl: str | None, activation: str
+                       ) -> Tuple[Network, DerivativeEngine]:
+    """New-style callers pass ``net=`` + an engine object/spec; old-style
+    callers pass a bare ``MLPParams`` with ``engine=``/``impl=``/
+    ``activation=`` strings, for which a :class:`DenseMLP` view is
+    reconstructed from the parameter shapes."""
+    if net is None:
+        if not isinstance(params, MLPParams):
+            raise TypeError(
+                "params is not an MLPParams; pass the owning network via "
+                "net= (any repro.core.network.Network)")
+        net = DenseMLP.from_params(params, activation)
+    return net, resolve_engine(engine, impl)
 
+
+def _check_scalar(net: Network, what: str) -> None:
+    if net.d_out != 1:
+        raise ValueError(
+            f"{what} consumes a scalar field u (net.d_out == 1); got "
+            f"d_out={net.d_out}.  Vector-valued PDE systems need per-"
+            "component operators (see ROADMAP).")
+
+
+def build_table(net: Network, params, engine: DerivativeEngine,
+                op: Operator, x: jnp.ndarray) -> DerivTable:
+    """Everything the residual will look up, precomputed in batched engine
+    calls: one ``grid`` for pure derivatives plus one polarization ``cross``
+    per declared mixed partial."""
+    _check_scalar(net, f"operator {op.name!r}")
+    pure = engine.grid(net, params, x, op.order)[..., 0]     # (d_in, n+1, N)
+    mixed = {tuple(sorted(a)): engine.cross(net, params, x, a)[:, 0]
+             for a in op.mixed}
+    return DerivTable(pure, mixed)
+
+
+def residual_values(params, op: Operator, x: jnp.ndarray, *,
+                    engine: Union[str, DerivativeEngine] = "ntp",
+                    activation: str = "tanh", impl: str = "jnp",
+                    net: Network | None = None) -> jnp.ndarray:
+    """Pointwise residual (N,) of the network under ``op``."""
+    net, eng = resolve_net_engine(params, net, engine, impl, activation)
+    return op.residual(x, build_table(net, params, eng, op, x))
+
+
+# ---------------------------------------------------------------------------
+# analytic-function oracles (method of manufactured solutions)
+# ---------------------------------------------------------------------------
 
 def autodiff_pure_derivs_fn(fn: Callable[[jnp.ndarray], jnp.ndarray],
                             x: jnp.ndarray, order: int) -> jnp.ndarray:
     """(d_in, order+1, N) pure derivatives of any scalar fn((d_in,)) -> ()
-    via nested ``jax.grad`` towers -- the O(M^order) baseline and the oracle
-    path for analytic solutions."""
+    via nested ``jax.grad`` towers -- the oracle path for analytic
+    solutions."""
     d = x.shape[-1]
 
     def one_axis(v):
@@ -129,29 +212,35 @@ def autodiff_pure_derivs_fn(fn: Callable[[jnp.ndarray], jnp.ndarray],
     return jnp.transpose(jax.vmap(one_axis)(eye), (0, 2, 1))
 
 
-def _table(D: jnp.ndarray) -> DerivTable:
-    return lambda axis, k: D[axis, k]
-
-
-def residual_values(params: MLPParams, op: Operator, x: jnp.ndarray, *,
-                    engine: str = "ntp", activation: str = "tanh",
-                    impl: str = "jnp") -> jnp.ndarray:
-    """Pointwise residual (N,) of the network under ``op``."""
-    if engine == "ntp":
-        D = ntp_pure_derivs(params, x, op.order, activation, impl)
-    elif engine == "autodiff":
-        fn = lambda xi: mlp_apply(params, xi[None, :], activation, unroll=True)[0, 0]
-        D = autodiff_pure_derivs_fn(fn, x, op.order)
-    else:
-        raise ValueError(f"unknown engine {engine!r} (want 'ntp' or 'autodiff')")
-    return op.residual(x, _table(D))
+def autodiff_mixed_partial_fn(fn: Callable[[jnp.ndarray], jnp.ndarray],
+                              x: jnp.ndarray,
+                              axes: Tuple[int, ...]) -> jnp.ndarray:
+    """(N,) mixed partial of a scalar fn((d_in,)) -> () by direct ``jax.grad``
+    nesting along the named coordinates (independent of polarization, so it
+    oracles :meth:`DerivativeEngine.cross` too)."""
+    g = fn
+    for a in axes:
+        g = (lambda gg, aa: lambda xi: jax.grad(gg)(xi)[aa])(g, a)
+    return jax.vmap(g)(x)
 
 
 def residual_of_fn(op: Operator, fn: Callable[[jnp.ndarray], jnp.ndarray],
                    x: jnp.ndarray) -> jnp.ndarray:
     """Residual of an arbitrary differentiable scalar function (the MMS oracle:
     ``residual_of_fn(op, exact, x) == 0`` certifies the operator's algebra)."""
-    return op.residual(x, _table(autodiff_pure_derivs_fn(fn, x, op.order)))
+    pure = autodiff_pure_derivs_fn(fn, x, op.order)
+    mixed = {tuple(sorted(a)): autodiff_mixed_partial_fn(fn, x, a)
+             for a in op.mixed}
+    return op.residual(x, DerivTable(pure, mixed))
+
+
+def ntp_pure_derivs(params: MLPParams, x: jnp.ndarray, order: int,
+                    activation: str = "tanh", impl: str = "jnp") -> jnp.ndarray:
+    """(d_in, order+1, N) raw pure derivatives of the network, one jet batch.
+    (Legacy surface; ``engine.grid(net, ...)`` is the generic form.)"""
+    from repro.core.engines import NTPEngine
+    net = DenseMLP.from_params(params, activation)
+    return NTPEngine(impl).grid(net, params, x, order)[..., 0]
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +342,56 @@ register(Operator(
     residual=_poisson_residual, exact=_poisson_exact,
     domain=((0.0, _PI), (0.0, _PI)),
     description="u_xx + u_yy - f;  exact u = sin x sin y (zero on the boundary)",
+))
+
+
+# -- advection-diffusion with a rotated anisotropic diffusion tensor --------
+#
+# u_t + a . grad u - div(D grad u) = f on (t, x, y), where D = R V R^T with
+# rotation R(theta) and principal diffusivities V = diag(nu1, nu2).  In the
+# unrotated frame div(D grad u) = d11 u_xx + 2 d12 u_xy + d22 u_yy, so the
+# residual has a *genuine mixed-partial term* -- the first registered
+# operator to consume polarization (engine.cross / repro.core.ntp.cross).
+
+AD_THETA = _PI / 6.0
+AD_NU = (0.3, 0.1)
+AD_VEL = (0.7, -0.4)
+
+_c, _s = float(np.cos(AD_THETA)), float(np.sin(AD_THETA))
+AD_D11 = AD_NU[0] * _c ** 2 + AD_NU[1] * _s ** 2
+AD_D22 = AD_NU[0] * _s ** 2 + AD_NU[1] * _c ** 2
+AD_D12 = (AD_NU[0] - AD_NU[1]) * _s * _c
+
+
+def _ad_exact(x):
+    return jnp.exp(-x[:, 0]) * jnp.sin(x[:, 1]) * jnp.sin(x[:, 2])
+
+
+def _ad_forcing(x):
+    # u* = exp(-t) sin x sin y:  u*_t = -u*, u*_xx = u*_yy = -u*,
+    # u*_xy = exp(-t) cos x cos y
+    e = jnp.exp(-x[:, 0])
+    u = e * jnp.sin(x[:, 1]) * jnp.sin(x[:, 2])
+    return (-u
+            + AD_VEL[0] * e * jnp.cos(x[:, 1]) * jnp.sin(x[:, 2])
+            + AD_VEL[1] * e * jnp.sin(x[:, 1]) * jnp.cos(x[:, 2])
+            + (AD_D11 + AD_D22) * u
+            - 2.0 * AD_D12 * e * jnp.cos(x[:, 1]) * jnp.cos(x[:, 2]))
+
+
+def _ad_residual(x, d):
+    adv = AD_VEL[0] * d(1, 1) + AD_VEL[1] * d(2, 1)
+    diff = AD_D11 * d(1, 2) + 2.0 * AD_D12 * d.mixed(1, 2) + AD_D22 * d(2, 2)
+    return d(0, 1) + adv - diff - _ad_forcing(x)
+
+
+register(Operator(
+    name="advection-diffusion", d_in=3, order=2,
+    residual=_ad_residual, exact=_ad_exact,
+    domain=((0.0, 1.0), (-_PI, _PI), (-_PI, _PI)),
+    mixed=((1, 2),),
+    description="u_t + a.grad u - div(D grad u) - f, D rotated by pi/6 "
+                "(cross term 2 d12 u_xy);  manufactured u = exp(-t) sin x sin y",
 ))
 
 

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 
 import numpy as np
 
+from repro.core.engines import DerivativeEngine, resolve_engine
+from repro.core.network import Network, make_network
 from repro.core.ntp import MLPParams, init_mlp, mlp_apply, num_params
 from repro.data.collocation import (boundary_grid, eval_grid, resample,
                                     sample_box, uniform_grid)
@@ -155,19 +157,28 @@ def _lam_of(lam_raw, window):
 
 @dataclass
 class OperatorRunConfig:
-    """Training config for any registered differential operator."""
+    """Training config for any registered differential operator.
+
+    ``engine`` accepts a spec string ("ntp", "ntp/pallas", "autodiff") or a
+    :class:`DerivativeEngine` instance; the separate ``impl`` field is the
+    pre-redesign spelling and still honored.  ``network`` names a registered
+    architecture ("dense", "mlp", "residual", "fourier"); ``net_kwargs``
+    passes architecture extras (e.g. ``{"n_features": 32}`` for fourier).
+    """
 
     op: str = "heat"
     width: int = 32
     depth: int = 3
     activation: str = "tanh"
+    network: str = "dense"
+    net_kwargs: Dict = field(default_factory=dict)
     n_domain: int = 1024
     n_bc: int = 64                  # boundary points per face
     adam_steps: int = 2000
     adam_lr: float = 2e-3
     lbfgs_steps: int = 0
-    engine: str = "ntp"             # "ntp" | "autodiff"
-    impl: str = "jnp"               # "jnp" | "pallas" (ntp only)
+    engine: str = "ntp"             # spec string or DerivativeEngine
+    impl: str = "jnp"               # legacy "jnp" | "pallas" (ntp only)
     weights: LossWeights = field(default_factory=LossWeights)
     seed: int = 0
     resample_every: int = 500
@@ -177,13 +188,14 @@ class OperatorRunConfig:
 
 @dataclass
 class OperatorResult:
-    params: MLPParams
+    params: object                  # the network's parameter pytree
     op_name: str
     loss_history: List[float]
     l2_error: float                 # RMS vs the exact solution on a dense grid
     adam_time_s: float
     lbfgs_time_s: float
     n_params: int
+    net: Optional[Network] = None
 
 
 def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
@@ -194,15 +206,18 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
     dtype = jnp.float64
     key = jax.random.PRNGKey(cfg.seed)
     k_init, k_pts = jax.random.split(key)
-    params = init_mlp(k_init, op.d_in, cfg.width, cfg.depth, 1, dtype=dtype)
+    net = make_network(cfg.network, d_in=op.d_in, d_out=1, width=cfg.width,
+                       depth=cfg.depth, activation=cfg.activation,
+                       **cfg.net_kwargs)
+    engine = resolve_engine(cfg.engine, cfg.impl)
+    params = net.init(k_init, dtype=dtype)
 
     bc_pts = boundary_grid(op.domain, cfg.n_bc, dtype)
     bc_vals = jnp.asarray(np.asarray(op.exact(bc_pts)), dtype)
 
     def loss_fn(p, pts):
         return pinn_loss(p, op=op, pts=pts, bc_pts=bc_pts, bc_vals=bc_vals,
-                         weights=cfg.weights, engine=cfg.engine, impl=cfg.impl,
-                         activation=cfg.activation)
+                         weights=cfg.weights, engine=engine, net=net)
 
     @jax.jit
     def adam_step(p, state, pts):
@@ -242,11 +257,11 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
         loss_hist.extend(res.loss_history)
 
     xe = eval_grid(op.domain, cfg.eval_pts_per_axis, dtype)
-    u_net = mlp_apply(params, xe, cfg.activation)[:, 0]
+    u_net = net.apply(params, xe)[:, 0]
     u_true = jnp.asarray(np.asarray(op.exact(xe)), dtype)
     l2 = float(jnp.sqrt(jnp.mean((u_net - u_true) ** 2)))
 
     return OperatorResult(params=params, op_name=op.name,
                           loss_history=loss_hist, l2_error=l2,
                           adam_time_s=adam_time, lbfgs_time_s=lbfgs_time,
-                          n_params=num_params(params))
+                          n_params=num_params(params), net=net)

@@ -1,0 +1,255 @@
+"""The derivative-engine redesign: engines x networks agreement, spec
+parsing and the deprecation shim, property tests of the jet algebra against
+``jax.experimental.jet`` pushforwards (the :class:`JaxJetEngine` oracle), and
+the new architectures training end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import jet as jjet
+
+from _compat import int_grid
+from repro.core import jet as J
+from repro.core import (AutodiffEngine, DenseMLP, DerivativeEngine,
+                        FourierFeatureMLP, JaxJetEngine, MLP, MLPParams,
+                        NTPEngine, ResidualMLP, init_mlp, make_network,
+                        network_names, resolve_engine)
+from repro.pinn import (OperatorRunConfig, get_operator, pinn_loss,
+                        residual_values, train_operator)
+from repro.data.collocation import boundary_grid, sample_box
+
+NETWORKS = {
+    "dense": DenseMLP(2, 10, 3, 1),
+    "mlp": MLP((2, 8, 12, 1)),
+    "residual": ResidualMLP(2, 10, 2, 1),
+    "fourier": FourierFeatureMLP(2, 10, 2, 1, n_features=6),
+}
+
+
+def _pts(n=5, d=2, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# engines agree on every network
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_all_engines_agree_on_derivs(name):
+    net = NETWORKS[name]
+    params = net.init(jax.random.PRNGKey(3), dtype=jnp.float64)
+    x = _pts()
+    a = NTPEngine("jnp").derivs(net, params, x, 3)
+    b = AutodiffEngine().derivs(net, params, x, 3)
+    c = JaxJetEngine().derivs(net, params, x, 3)
+    assert a.shape == (4, x.shape[0], net.d_out)
+    np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(a, c, rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_grid_and_cross_agree(name):
+    net = NETWORKS[name]
+    params = net.init(jax.random.PRNGKey(4), dtype=jnp.float64)
+    x = _pts(4)
+    np.testing.assert_allclose(NTPEngine("jnp").grid(net, params, x, 2),
+                               AutodiffEngine().grid(net, params, x, 2),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(NTPEngine("jnp").cross(net, params, x, (0, 1)),
+                               AutodiffEngine().cross(net, params, x, (0, 1)),
+                               rtol=1e-7, atol=1e-9)
+
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_pallas_impl_matches_jnp_on_networks(name):
+    net = NETWORKS[name]
+    params = net.init(jax.random.PRNGKey(5), dtype=jnp.float32)
+    x = _pts(6).astype(jnp.float32)
+    a = NTPEngine("jnp").derivs(net, params, x, 3)
+    b = NTPEngine("pallas").derivs(net, params, x, 3)
+    np.testing.assert_allclose(a, b, rtol=3e-3, atol=3e-4)
+
+
+def test_vector_valued_network_derivs():
+    net = MLP((2, 8, 3))
+    params = net.init(jax.random.PRNGKey(9), dtype=jnp.float64)
+    x = _pts()
+    a = NTPEngine("jnp").derivs(net, params, x, 2)
+    b = AutodiffEngine().derivs(net, params, x, 2)   # jacfwd tower path
+    c = JaxJetEngine().derivs(net, params, x, 2)
+    assert a.shape == (3, 5, 3)
+    np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(a, c, rtol=1e-8, atol=1e-10)
+
+
+def test_apply_matches_order_zero():
+    for net in NETWORKS.values():
+        params = net.init(jax.random.PRNGKey(6), dtype=jnp.float64)
+        x = _pts(3)
+        y = net.apply(params, x)
+        np.testing.assert_allclose(y, net.apply(params, x, unroll=True),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(
+            y[None], NTPEngine("jnp").derivs(net, params, x, 0), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing + the deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_from_spec_round_trips():
+    for spec, typ in (("ntp", NTPEngine), ("ntp/pallas", NTPEngine),
+                      ("autodiff", AutodiffEngine), ("jet", JaxJetEngine)):
+        eng = DerivativeEngine.from_spec(spec)
+        assert isinstance(eng, typ)
+        assert eng.spec == spec
+        assert DerivativeEngine.from_spec(eng) is eng
+    assert DerivativeEngine.from_spec("ntp/pallas").impl == "pallas"
+    with pytest.raises(ValueError):
+        DerivativeEngine.from_spec("hessian")
+    with pytest.raises(ValueError):
+        DerivativeEngine.from_spec("autodiff/pallas")
+    with pytest.raises(ValueError):
+        NTPEngine("cuda")
+
+
+def test_resolve_engine_accepts_legacy_pair():
+    assert resolve_engine("ntp", "pallas") == NTPEngine("pallas")
+    assert resolve_engine("ntp", None) == NTPEngine("jnp")
+    assert resolve_engine("autodiff", "jnp").spec == "autodiff"
+    eng = NTPEngine("pallas")
+    assert resolve_engine(eng, "jnp") is eng   # instance wins over impl
+
+
+def test_legacy_kwargs_match_engine_objects():
+    """The old string-triple call sites produce bit-identical residuals."""
+    op = get_operator("heat")
+    params = init_mlp(jax.random.PRNGKey(0), 2, 10, 2, 1, dtype=jnp.float64)
+    x = sample_box(jax.random.PRNGKey(1), op.domain, 8, jnp.float64)
+    old = residual_values(params, op, x, engine="ntp", impl="jnp",
+                          activation="tanh")
+    new = residual_values(params, op, x, engine=NTPEngine("jnp"),
+                          net=DenseMLP(2, 10, 2, 1))
+    np.testing.assert_allclose(old, new, rtol=0, atol=0)
+
+
+def test_non_mlpparams_require_explicit_net():
+    op = get_operator("heat")
+    net = ResidualMLP(2, 8, 1, 1)
+    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
+    x = sample_box(jax.random.PRNGKey(1), op.domain, 4, jnp.float64)
+    with pytest.raises(TypeError, match="net="):
+        residual_values(params, op, x)          # dict params, no net
+    residual_values(params, op, x, net=net)     # ok with the owning net
+
+
+def test_pinn_loss_rejects_vector_networks():
+    op = get_operator("heat")
+    net = MLP((2, 8, 2))
+    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
+    x = sample_box(jax.random.PRNGKey(1), op.domain, 4, jnp.float64)
+    bc = boundary_grid(op.domain, 4, jnp.float64)
+    with pytest.raises(ValueError, match="d_out=2"):
+        pinn_loss(params, op=op, pts=x, bc_pts=bc,
+                  bc_vals=jnp.zeros(bc.shape[0]), net=net)
+
+
+def test_network_registry():
+    assert {"dense", "mlp", "residual", "fourier"} <= set(network_names())
+    net = make_network("fourier", d_in=3, d_out=1, width=8, depth=2,
+                       n_features=4)
+    assert net.d_in == 3 and net.d_out == 1
+    with pytest.raises(KeyError):
+        make_network("transformer", d_in=2, d_out=1, width=8, depth=2)
+    dense = make_network("dense", d_in=2, d_out=1, width=8, depth=2)
+    assert isinstance(dense.init(jax.random.PRNGKey(0)), MLPParams)
+
+
+# ---------------------------------------------------------------------------
+# jet-algebra property tests against jax.experimental.jet pushforwards
+# ---------------------------------------------------------------------------
+
+def _rand_jet(seed: int, order: int, shape=(3,), positive=False) -> J.Jet:
+    c = 0.5 * jax.random.normal(jax.random.PRNGKey(seed),
+                                (order + 1,) + shape, jnp.float64)
+    if positive:
+        c = c.at[0].set(jnp.abs(c[0]) + 1.0)
+    return J.Jet(c)
+
+
+def _jjet_raw(fn, *jets: J.Jet) -> jnp.ndarray:
+    """Raw derivatives of fn(*jets) per jax.experimental.jet (the oracle)."""
+    raws = [J.derivatives(j) for j in jets]
+    y0, ys = jjet.jet(fn, tuple(r[0] for r in raws),
+                      tuple(list(r[1:]) for r in raws))
+    return jnp.stack([y0] + list(ys))
+
+
+def _check(mine: J.Jet, fn, *jets: J.Jet):
+    np.testing.assert_allclose(J.derivatives(mine), _jjet_raw(fn, *jets),
+                               rtol=1e-8, atol=1e-9)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_exp_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order)
+    _check(J.exp(a), jnp.exp, a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_log_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order, positive=True)
+    _check(J.log(a), jnp.log, a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_div_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order)
+    b = _rand_jet(seed + 1, order, positive=True)
+    _check(J.div(a, b), jnp.divide, a, b)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_powr_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order, positive=True)
+    _check(J.powr(a, 1.7), lambda x: jnp.power(x, 1.7), a)
+    _check(J.sqrt(a), jnp.sqrt, a)
+    _check(J.rsqrt(a), jax.lax.rsqrt, a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_softmax_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order, shape=(2, 4))
+    _check(J.softmax(a), jax.nn.softmax, a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_rms_norm_matches_jax_jet(order, seed):
+    a = _rand_jet(seed, order, shape=(2, 4))
+    gamma = jnp.linspace(0.5, 1.5, 4, dtype=jnp.float64)
+
+    def ref(x):
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-6) * gamma
+
+    _check(J.rms_norm(a, gamma), ref, a)
+
+
+# ---------------------------------------------------------------------------
+# new architectures train end-to-end through the n-TangentProp engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("network,net_kwargs", [
+    ("residual", {}),
+    ("fourier", {"n_features": 8, "feature_scale": 0.5}),
+])
+def test_new_networks_train_on_registered_pde(network, net_kwargs):
+    cfg = OperatorRunConfig(op="heat", network=network, net_kwargs=net_kwargs,
+                            width=8, depth=2, adam_steps=60, adam_lr=3e-3,
+                            n_domain=64, n_bc=8, log_every=20,
+                            eval_pts_per_axis=8, engine="ntp")
+    res = train_operator(cfg)
+    assert np.isfinite(res.l2_error)
+    assert res.loss_history[-1] < res.loss_history[0]
+    assert type(res.net).__name__ in ("ResidualMLP", "FourierFeatureMLP")

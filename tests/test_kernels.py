@@ -80,6 +80,20 @@ def test_sigmoid_kernel_path():
     np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
 
 
+def test_sin_kernel_path():
+    """The SIREN / Fourier-trunk activation runs in-kernel (cyclic
+    sigma^(m)(a) = sin(a + m pi/2) stack), not via the reference fallback."""
+    c = jax.random.normal(jax.random.PRNGKey(5), (5, 9, 33), jnp.float32)
+    got = act_jet_pallas(c, "sin", interpret=True)
+    want = ref.act_jet_ref(c, "sin")
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+    w = jax.random.normal(jax.random.PRNGKey(6), (33, 17), jnp.float32) * 0.1
+    b = jnp.zeros((17,), jnp.float32)
+    got = jet_dense_pallas(c, w, b, "sin", interpret=True)
+    want = ref.jet_dense_ref(c, w, b, "sin")
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
 def test_tables_are_static_and_exact():
     rows = tanh_poly_rows(6)
     assert rows[1][:3] == (1.0, 0.0, -1.0)  # tanh' = 1 - u^2

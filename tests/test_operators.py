@@ -9,14 +9,18 @@ import numpy as np
 import pytest
 
 from repro.core import jet as J
+from repro.core.engines import AutodiffEngine, NTPEngine
+from repro.core.network import DenseMLP
 from repro.core.ntp import cross, init_mlp, mlp_apply
 from repro.data.collocation import boundary_grid, eval_grid, sample_box
-from repro.pinn import (LossWeights, OperatorRunConfig, burgers_operator,
+from repro.pinn import (DerivTable, LossWeights, OperatorRunConfig,
+                        autodiff_mixed_partial_fn, burgers_operator,
                         get_operator, operator_names, pinn_loss, register,
                         residual_jet, residual_of_fn, residual_values,
                         train_operator)
 
-NEW_OPS = ("heat", "wave", "kdv", "allen-cahn", "poisson2d")
+NEW_OPS = ("heat", "wave", "kdv", "allen-cahn", "poisson2d",
+           "advection-diffusion")
 ALL_OPS = NEW_OPS + ("burgers",)
 
 
@@ -88,7 +92,8 @@ def test_burgers_operator_matches_residual_jet():
 # oracle 3: the pallas kernel path
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ("heat", "kdv", "burgers"))
+@pytest.mark.parametrize("name", ("heat", "kdv", "burgers",
+                                  "advection-diffusion"))
 def test_pallas_impl_matches_jnp(name):
     op = get_operator(name)
     params = init_mlp(jax.random.PRNGKey(0), op.d_in, 16, 3, 1,
@@ -97,6 +102,35 @@ def test_pallas_impl_matches_jnp(name):
     a = residual_values(params, op, x, engine="ntp", impl="jnp")
     b = residual_values(params, op, x, engine="ntp", impl="pallas")
     np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixed partials: the advection-diffusion cross term + the DerivTable surface
+# ---------------------------------------------------------------------------
+
+def test_advection_diffusion_consumes_cross_polarization():
+    """The u_xy term reaches the residual through engine.cross (polarization
+    of directional jets) and matches a direct nested-grad mixed partial."""
+    op, params, x = _net_and_pts("advection-diffusion")
+    net = DenseMLP.from_params(params)
+    ours = NTPEngine("jnp").cross(net, params, x, (1, 2))[:, 0]
+    fn = lambda xi: mlp_apply(params, xi[None, :], unroll=True)[0, 0]
+    ref = autodiff_mixed_partial_fn(fn, x, (1, 2))
+    np.testing.assert_allclose(ours, ref, rtol=1e-8, atol=1e-10)
+    # and the mixed term genuinely contributes to the residual (d12 != 0)
+    from repro.pinn.operators import build_table
+    table = build_table(net, params, NTPEngine("jnp"), op, x)
+    r_full = op.residual(x, table)
+    r_nomix = op.residual(x, DerivTable(table._pure,
+                                        {(1, 2): jnp.zeros(x.shape[0])}))
+    assert float(jnp.max(jnp.abs(r_full - r_nomix))) > 1e-6
+
+
+def test_deriv_table_rejects_undeclared_mixed():
+    d = DerivTable(jnp.zeros((2, 3, 4)), {(0, 1): jnp.zeros(4)})
+    np.testing.assert_allclose(d.mixed(1, 0), 0.0)   # order-insensitive
+    with pytest.raises(KeyError, match="mixed="):
+        d.mixed(0, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +182,27 @@ def test_generic_loss_engines_agree(name):
     # accepts the operator by name too
     l3, _ = pinn_loss(params, engine="ntp", **{**kw, "op": name})
     np.testing.assert_allclose(float(l1), float(l3), rtol=1e-12)
+
+
+@pytest.mark.parametrize("name", ALL_OPS)
+def test_loss_identical_across_all_engine_objects(name):
+    """Acceptance: every registered operator produces the same loss under
+    NTPEngine('jnp'), NTPEngine('pallas'), and AutodiffEngine() through the
+    new object API, and the old engine=/impl= keyword path agrees."""
+    op = get_operator(name)
+    params = init_mlp(jax.random.PRNGKey(2), op.d_in, 10, 2, 1,
+                      dtype=jnp.float32)
+    x = sample_box(jax.random.PRNGKey(3), op.domain, 12, jnp.float32)
+    bc = boundary_grid(op.domain, 4, jnp.float32)
+    bc_vals = jnp.asarray(np.asarray(op.exact(bc)), jnp.float32)
+    kw = dict(op=op, pts=x, bc_pts=bc, bc_vals=bc_vals, weights=LossWeights())
+    l_jnp = float(pinn_loss(params, engine=NTPEngine("jnp"), **kw)[0])
+    l_pal = float(pinn_loss(params, engine=NTPEngine("pallas"), **kw)[0])
+    l_ad = float(pinn_loss(params, engine=AutodiffEngine(), **kw)[0])
+    l_old = float(pinn_loss(params, engine="ntp", impl="jnp", **kw)[0])
+    np.testing.assert_allclose(l_jnp, l_ad, rtol=2e-4)
+    np.testing.assert_allclose(l_jnp, l_pal, rtol=2e-3)
+    np.testing.assert_allclose(l_jnp, l_old, rtol=0, atol=0)
 
 
 def test_generic_loss_is_jit_and_grad_compatible():
