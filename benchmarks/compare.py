@@ -1,0 +1,128 @@
+"""Benchmark regression gate: diff a fresh ``--json`` run against the
+checked-in baseline.
+
+Two classes of check, with different strictness (CI runners have noisy
+timings, but coverage is exact):
+
+* **coverage (hard failure)** -- every (suite, name) pair present in the
+  baseline must appear in the current run, and every operator in the
+  registry must appear under every benchmarked engine spec.  A new operator
+  or suite that silently drops out of the benchmark matrix fails the PR;
+  a newly *added* row does not (it will enter the baseline when
+  ``baseline_smoke.json`` is regenerated).
+* **timing (warn-only by default)** -- rows slower than ``--max-ratio``
+  times their baseline are reported; pass ``--strict-timing`` to turn those
+  warnings into failures (meant for dedicated perf hardware, not shared CPU
+  CI runners).
+
+Regenerate the baseline after intentionally changing the benchmark matrix:
+
+  PYTHONPATH=src python -m benchmarks.run --only operators --smoke \\
+      --json benchmarks/baseline_smoke.json
+  PYTHONPATH=src python -m benchmarks.compare --current BENCH_operators.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baseline_smoke.json"
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        payload = json.load(fh)
+    for field in ("schema_version", "results"):
+        if field not in payload:
+            raise SystemExit(f"{path}: not a benchmark JSON (missing "
+                             f"{field!r}); regenerate with run.py --json")
+    return payload
+
+
+def index(payload: dict) -> dict:
+    return {(r["suite"], r["name"]): r for r in payload["results"]}
+
+
+def expected_operator_rows() -> set:
+    """Every registered operator under every engine spec the operators suite
+    benchmarks -- both imported from their owning modules, so registering a
+    new PDE (or adding an engine spec to the sweep) without benchmark
+    coverage fails the gate."""
+    from repro.pinn.operators import operator_names
+
+    from .operators_bench import SPECS, spec_tag
+    return {("operators", f"residual_{op}_{spec_tag(spec)}")
+            for op in operator_names() for spec in SPECS}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--current", required=True,
+                    help="fresh run.py --json output (e.g. "
+                         "BENCH_operators.json)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="flag rows slower than RATIO x baseline "
+                         "(default 2.0)")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="timing regressions fail instead of warn (for "
+                         "dedicated perf hardware)")
+    args = ap.parse_args()
+
+    base, cur = load(args.baseline), load(args.current)
+    if cur["schema_version"] != base["schema_version"]:
+        raise SystemExit(f"schema mismatch: baseline v{base['schema_version']}"
+                         f" vs current v{cur['schema_version']}")
+    if cur.get("mode") != base.get("mode"):
+        raise SystemExit(
+            f"mode mismatch: baseline is a {base.get('mode')!r} run, current "
+            f"is {cur.get('mode')!r}; coverage and timings are only "
+            f"comparable at matching shapes (rerun with matching flags or "
+            f"regenerate the baseline)")
+    bidx, cidx = index(base), index(cur)
+    failures, warnings = [], []
+
+    if cur.get("failed_suites"):
+        failures.append(f"suites raised during the run: "
+                        f"{sorted(cur['failed_suites'])}")
+
+    missing = sorted(set(bidx) - set(cidx))
+    if missing:
+        failures.append("rows present in the baseline but missing from the "
+                        "current run:\n  " +
+                        "\n  ".join(f"{s}/{n}" for s, n in missing))
+
+    missing_ops = sorted(expected_operator_rows() - set(cidx))
+    if missing_ops:
+        failures.append("registered operators without benchmark coverage:\n"
+                        "  " + "\n  ".join(f"{s}/{n}" for s, n in missing_ops))
+
+    for key in sorted(set(bidx) & set(cidx)):
+        b, c = bidx[key]["us_per_call"], cidx[key]["us_per_call"]
+        if b > 0 and c > args.max_ratio * b:
+            warnings.append(f"{key[0]}/{key[1]}: {c:.1f}us vs baseline "
+                            f"{b:.1f}us ({c / b:.2f}x)")
+
+    if warnings:
+        kind = "FAIL" if args.strict_timing else "WARN"
+        print(f"[{kind}] {len(warnings)} row(s) slower than "
+              f"{args.max_ratio:.1f}x baseline:")
+        for w in warnings:
+            print(f"  {w}")
+        if args.strict_timing:
+            failures.append("timing regressions (--strict-timing)")
+
+    n_rows = len(cidx)
+    if failures:
+        print(f"benchmark gate FAILED ({n_rows} current rows):")
+        for f in failures:
+            print(f"- {f}")
+        sys.exit(1)
+    print(f"benchmark gate OK: {n_rows} rows, coverage complete"
+          + (f", {len(warnings)} timing warning(s)" if warnings else ""))
+
+
+if __name__ == "__main__":
+    main()

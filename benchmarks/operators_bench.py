@@ -8,7 +8,10 @@ beyond the Burgers workload: it grows with the operator's derivative order
 (heat/wave: 2, KdV: 3) exactly as the O(M^n) vs O(n p(n) M) analysis
 predicts.  ``network`` selects any registered architecture (the engine
 surface is network-agnostic), so e.g. ``network="fourier"`` times the
-random-feature embedding at zero extra benchmark code.
+random-feature embedding at zero extra benchmark code.  Vector-valued
+systems ride the same sweep: the network is built with ``d_out=op.d_out``,
+so ``gray-scott`` times the shared-table two-component residual and
+``navier-stokes`` the 4th-order polarization crosses.
 """
 
 from __future__ import annotations
@@ -26,7 +29,16 @@ from repro.pinn.operators import get_operator, residual_values
 from .common import axis_product, csv_row, time_fn
 
 DEFAULT_OPS = ("burgers", "heat", "wave", "allen-cahn", "kdv", "poisson2d",
-               "advection-diffusion")
+               "advection-diffusion", "navier-stokes", "gray-scott")
+
+# the full engine sweep; compare.py derives its coverage expectations from
+# this same tuple, so adding a spec here automatically widens the CI gate
+SPECS = ("ntp", "ntp/pallas", "autodiff")
+
+
+def spec_tag(spec: str) -> str:
+    """Engine spec -> the row-name tag used in benchmark output."""
+    return spec.replace("/", "_")
 
 
 def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
@@ -35,13 +47,13 @@ def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
     # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
     # and would change the precision (and timings) of every suite after this
     # one.  Timing is dtype-uniform with the other suites instead.
-    specs = ("ntp", "ntp/pallas", "autodiff") if include_pallas \
-        else ("ntp", "autodiff")
+    specs = SPECS if include_pallas \
+        else tuple(s for s in SPECS if not s.endswith("pallas"))
     rows = []
     ntp_times = {}
     for case in axis_product(op=operators, spec=specs):
         op = get_operator(case["op"])
-        net = make_network(network, d_in=op.d_in, d_out=1, width=width,
+        net = make_network(network, d_in=op.d_in, d_out=op.d_out, width=width,
                            depth=depth)
         engine = DerivativeEngine.from_spec(case["spec"])
         params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
@@ -52,10 +64,11 @@ def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
                 p, _op, pts, engine=_eng, net=_net),
             _op=op, _eng=engine, _net=net))
         t = time_fn(fn, params, x, trials=trials)
-        tag = engine.spec.replace("/", "_")
+        tag = spec_tag(engine.spec)
         if engine.spec == "ntp":
             ntp_times[op.name] = t
-        derived = f"order={op.order};d_in={op.d_in};net={network}"
+        derived = f"order={op.order};d_in={op.d_in};d_out={op.d_out};" \
+                  f"net={network}"
         if engine.spec == "autodiff" and op.name in ntp_times:
             derived += f";vs_ntp_x={t / ntp_times[op.name]:.2f}"
         rows.append(csv_row(f"residual_{op.name}_{tag}", t, derived))

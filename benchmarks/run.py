@@ -3,16 +3,31 @@
 Prints ``name,us_per_call,derived`` CSV.  Fast mode keeps CPU wall time sane;
 pass --full for the paper-scale grids, --smoke for the CI completeness check
 (tiny shapes, one trial -- benchmark code must at least *run* on every PR so
-it cannot rot uncollected).
+it cannot rot uncollected).  ``--json PATH`` additionally writes the rows as
+structured records (suite, name, us_per_call, mode, derived) -- the CI
+tier-1 job uploads that file as a ``BENCH_*.json`` artifact on every commit
+so the perf trajectory is machine-readable, and ``benchmarks/compare.py``
+gates PRs on its coverage against ``benchmarks/baseline_smoke.json``.
 
   PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only NAME]
+                                          [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def parse_row(suite: str, mode: str, row: str) -> dict:
+    """One ``name,us_per_call,derived`` CSV line -> a structured record."""
+    name, us, derived = row.split(",", 2)
+    return {"suite": suite, "name": name, "us_per_call": float(us),
+            "mode": mode, "derived": derived}
 
 
 def main() -> None:
@@ -22,6 +37,9 @@ def main() -> None:
                     help="tiny shapes / single trial; used by the CI tier-1 "
                          "job to keep benchmark code importable and runnable")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write structured results (suite, name, "
+                         "us_per_call, mode, derived) to PATH")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -57,10 +75,14 @@ def main() -> None:
             "full": dict(adam_steps=200, lbfgs_steps=40)}),
         "roofline": (roofline.run, {"smoke": {}, "fast": {}, "full": {}}),
     }
+    if args.only and args.only not in registry:
+        ap.error(f"unknown suite {args.only!r}; known: "
+                 f"{', '.join(sorted(registry))}")
     suites = {name: (lambda fn=fn, kw=kws[mode]: fn(**kw))
               for name, (fn, kws) in registry.items()}
     print("name,us_per_call,derived")
-    failed = 0
+    records = []
+    failed_suites = []
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -68,10 +90,25 @@ def main() -> None:
             for row in fn():
                 print(row)
                 sys.stdout.flush()
+                records.append(parse_row(name, mode, row))
         except Exception:
             traceback.print_exc()
-            failed += 1
-    sys.exit(1 if failed else 0)
+            failed_suites.append(name)
+
+    if args.json:
+        payload = {
+            "schema_version": BENCH_SCHEMA_VERSION,
+            "mode": mode,
+            "only": args.only,
+            "failed_suites": failed_suites,
+            "results": records,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {len(records)} records to {args.json}", file=sys.stderr)
+
+    sys.exit(1 if failed_suites else 0)
 
 
 if __name__ == "__main__":

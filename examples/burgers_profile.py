@@ -28,15 +28,15 @@ from repro.core.ntp import mlp_apply  # noqa: E402
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--k", type=int, default=1, help="profile index (lam=1/2k)")
-    ap.add_argument("--engine", choices=["ntp", "autodiff"], default="ntp")
-    ap.add_argument("--impl", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--engine", choices=["ntp", "ntp/pallas", "autodiff"],
+                    default="ntp", help="derivative-engine spec")
     ap.add_argument("--adam", type=int, default=1500)
     ap.add_argument("--lbfgs", type=int, default=300)
     ap.add_argument("--width", type=int, default=24)
     ap.add_argument("--depth", type=int, default=3)
     args = ap.parse_args()
 
-    cfg = PINNRunConfig(k=args.k, engine=args.engine, impl=args.impl,
+    cfg = PINNRunConfig(k=args.k, engine=args.engine,
                         adam_steps=args.adam, lbfgs_steps=args.lbfgs,
                         width=args.width, depth=args.depth)
     print(f"profile k={args.k}: target lambda = {profile_lambda(args.k)} | "

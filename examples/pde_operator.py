@@ -5,6 +5,8 @@
     PYTHONPATH=src python examples/pde_operator.py --op poisson2d --engine ntp/pallas
     PYTHONPATH=src python examples/pde_operator.py --op advection-diffusion \
         --network fourier --fourier-features 32
+    PYTHONPATH=src python examples/pde_operator.py --op navier-stokes   # 4th-order psi_xxyy
+    PYTHONPATH=src python examples/pde_operator.py --op gray-scott      # d_out=2 system
 
 Each operator carries a manufactured/exact solution: it supplies the
 boundary/initial data during training and the L2 accuracy oracle at the end.
@@ -44,7 +46,8 @@ def main():
 
     op = get_operator(args.op)
     print(f"operator {op.name}: {op.description}")
-    print(f"  d_in={op.d_in}, max pure-derivative order={op.order}, "
+    print(f"  d_in={op.d_in}, d_out={op.d_out}, "
+          f"max pure-derivative order={op.order}, "
           f"mixed partials={op.mixed or 'none'}, domain={op.domain}")
     print(f"  engine={args.engine}, network={args.network}")
 

@@ -1,6 +1,8 @@
 """PDE-operator PINN architecture: tanh MLP for the multi-PDE scenarios
-(heat / wave / KdV / Allen-Cahn / 2-D Poisson / advection-diffusion, the
-last with a genuine u_xy cross term served by polarization).
+(heat / wave / KdV / Allen-Cahn / 2-D Poisson / advection-diffusion /
+Navier-Stokes streamfunction / Gray-Scott; mixed partials up to the 4th-order
+psi_xxyy are served by polarization, and Gray-Scott trains one d_out=2
+network against a stacked two-equation residual).
 
 Wider than the paper's 3x24 Burgers net because the 2-D manufactured
 solutions carry more structure; registered so --arch pinn-pde drives the
@@ -22,7 +24,7 @@ CONFIG = ArchConfig(
     n_kv_heads=1,
     head_dim=1,
     d_ff=32,
-    vocab=2,             # d_in = 2 (t, x) or (x, y); d_out = 1
+    vocab=2,             # d_in = 2 (t, x) or (x, y); d_out follows op.d_out
     attn_pattern=("global",),
     dtype="float64",
     source="[operator subsystem default: 3 hidden layers x 32 neurons, tanh]",

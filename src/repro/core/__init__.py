@@ -4,7 +4,7 @@ stacks, jet-traceable networks, and the derivative-engine hierarchy."""
 from . import jet
 from .activations import TAYLOR_STACKS, tanh_taylor_stack
 from .engines import (AutodiffEngine, DerivativeEngine, JaxJetEngine,
-                      NTPEngine, resolve_engine)
+                      NTPEngine)
 from .jet import Jet
 from .network import (DenseMLP, MLP, FourierFeatureMLP, Network, ResidualMLP,
                       make_network, network_names, register_network)
@@ -16,7 +16,6 @@ from .partitions import (bell_number, faa_di_bruno_table, partition_count,
 __all__ = [
     "jet", "Jet", "TAYLOR_STACKS", "tanh_taylor_stack",
     "AutodiffEngine", "DerivativeEngine", "JaxJetEngine", "NTPEngine",
-    "resolve_engine",
     "DenseMLP", "MLP", "FourierFeatureMLP", "Network", "ResidualMLP",
     "make_network", "network_names", "register_network",
     "MLPParams", "cross", "init_mlp", "mlp_apply", "ntp_derivatives",

@@ -29,9 +29,13 @@ the whole surface.  Shipped engines:
 =====================  =====================================================
 
 Configs address engines by spec string: ``Engine.from_spec("ntp/pallas")``,
-``"ntp"``, ``"autodiff"``, ``"jet"``.  :func:`resolve_engine` additionally
-accepts the pre-redesign ``(engine="ntp", impl="pallas")`` keyword pair so
-old call sites keep working for one release.
+``"ntp"``, ``"autodiff"``, ``"jet"``; instances pass through unchanged.
+(The pre-redesign ``(engine="ntp", impl="pallas")`` keyword-pair shim was
+removed after its scheduled one-release deprecation window.)
+
+Every returned array carries a trailing component axis sized ``net.d_out``:
+``derivs`` is (order+1, N, d_out), ``grid`` (d_in, order+1, N, d_out) and
+``cross`` (N, d_out), for scalar fields and vector-valued PDE systems alike.
 """
 
 from __future__ import annotations
@@ -126,18 +130,6 @@ class DerivativeEngine:
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.spec!r})"
-
-
-def resolve_engine(engine: "str | DerivativeEngine",
-                   impl: str | None = None) -> DerivativeEngine:
-    """Deprecation shim: the pre-redesign API threaded ``engine="ntp"`` plus a
-    separate ``impl="pallas"`` keyword.  Accepts that pair, new-style spec
-    strings ("ntp/pallas"), and engine instances."""
-    if isinstance(engine, DerivativeEngine):
-        return engine
-    if engine == "ntp" and impl is not None:
-        return NTPEngine(impl)
-    return DerivativeEngine.from_spec(engine)
 
 
 # ---------------------------------------------------------------------------

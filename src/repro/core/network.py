@@ -32,7 +32,10 @@ FourierFeatureMLP  random-feature embedding ``[sin 2pi Bx, cos 2pi Bx]`` in
 New architectures implement the three-method protocol (or register a factory
 with :func:`register_network`) and every :class:`DerivativeEngine`, the
 operator subsystem, ``pinn_loss``, and ``train_operator`` consume them
-without further plumbing.
+without further plumbing.  ``d_out`` is unconstrained: a d_out > 1 network
+solves a vector-valued PDE system (one shared trunk, one output column per
+unknown field), and the engines carry the component axis through every
+derivative.
 """
 
 from __future__ import annotations
@@ -103,8 +106,9 @@ class DenseMLP:
 
     @classmethod
     def from_params(cls, params: MLPParams, activation: str = "tanh") -> "DenseMLP":
-        """Recover the architecture from a parameter pytree (the deprecation
-        shim for every pre-engine call site that only has the NamedTuple)."""
+        """Recover the architecture from a parameter pytree (for call sites
+        that hold only the seed NamedTuple, e.g. the legacy ntp_grid/cross
+        wrappers in core/ntp.py)."""
         return cls(d_in=params.w_in.shape[0], width=params.w_in.shape[1],
                    depth=params.w_hidden.shape[0] + 1,
                    d_out=params.w_out.shape[1], activation=activation)

@@ -7,8 +7,8 @@ from .losses import (LossWeights, bc_targets, burgers_pinn_loss, pinn_loss,
                      residual_jet_u)
 from .operators import (DerivTable, Operator, autodiff_mixed_partial_fn,
                         autodiff_pure_derivs_fn, build_table, burgers_operator,
-                        get_operator, ntp_pure_derivs, operator_names,
-                        register, residual_of_fn, residual_values,
-                        resolve_net_engine)
+                        check_net_matches, exact_values, get_operator,
+                        ntp_pure_derivs, operator_names, register,
+                        residual_of_fn, residual_values)
 from .trainer import (OperatorResult, OperatorRunConfig, PINNResult,
                       PINNRunConfig, train, train_operator)

@@ -3,13 +3,15 @@
 ``pinn_loss`` is the operator-generic objective: residual MSE over interior
 collocation points plus boundary/initial supervision against the operator's
 exact solution, generic over the :class:`DerivativeEngine` (``NTPEngine``
-quasilinear vs ``AutodiffEngine`` baseline, by object or spec string) and
-the :class:`Network` (``net=``; defaults to the :class:`DenseMLP` view of a
-bare ``MLPParams`` for backward compatibility).  The self-similar Burgers
-workload keeps its specialized objective (learnable lambda, Sobolev term,
-high-order origin smoothness -- paper eq. 1, 2 and appendix A) as
-``burgers_pinn_loss``; its residual algebra is also registered in the
-operator registry as ``"burgers"``.
+quasilinear vs ``AutodiffEngine`` baseline, by object or spec string), the
+:class:`Network` (``net=``, required -- the loss never guesses the
+architecture from a parameter pytree), and the operator's output rank:
+scalar PDEs and multi-equation systems (``op.d_out > 1``, e.g. Gray-Scott)
+run through the same code path, with boundary supervision across every
+component.  The self-similar Burgers workload keeps its specialized
+objective (learnable lambda, Sobolev term, high-order origin smoothness --
+paper eq. 1, 2 and appendix A) as ``burgers_pinn_loss``; its residual
+algebra is also registered in the operator registry as ``"burgers"``.
 """
 
 from __future__ import annotations
@@ -26,7 +28,7 @@ from repro.core.network import Network
 from repro.core.ntp import MLPParams, mlp_apply
 
 from .burgers import exact_profile, residual_derivs_autodiff, residual_jet
-from .operators import Operator, build_table, get_operator, resolve_net_engine
+from .operators import Operator, build_table, get_operator
 
 
 @dataclass(frozen=True)
@@ -42,33 +44,36 @@ class LossWeights:
 # ---------------------------------------------------------------------------
 
 def pinn_loss(params, *, op: Union[Operator, str], pts: jnp.ndarray,
-              bc_pts: jnp.ndarray, bc_vals: jnp.ndarray,
+              bc_pts: jnp.ndarray, bc_vals: jnp.ndarray, net: Network,
               weights: LossWeights = LossWeights(),
-              engine: Union[str, DerivativeEngine] = "ntp",
-              impl: str = "jnp", activation: str = "tanh",
-              net: Network | None = None) -> Tuple[jnp.ndarray, Dict]:
+              engine: Union[str, DerivativeEngine] = "ntp"
+              ) -> Tuple[jnp.ndarray, Dict]:
     """Operator-generic PINN objective: w_r ||R[u]||^2 + w_bc ||u - u*||^2_bd.
 
-    ``bc_vals`` is the exact solution on ``bc_pts`` -- precompute it outside
-    jit (``op.exact`` may be numpy-backed, e.g. the Burgers profile).  Only
+    ``bc_vals`` is the exact solution on ``bc_pts`` -- (N,) for scalar
+    operators, (N, d_out) for systems; precompute it outside jit
+    (``op.exact`` may be numpy-backed, e.g. the Burgers profile;
+    :func:`repro.pinn.operators.exact_values` normalizes the shape).  For a
+    multi-equation system the residual term averages the squares of every
+    equation and the boundary term supervises every output component.  Only
     ``engine``/``net`` change the derivative machinery and architecture; the
     loss surface is identical across engines (the paper's "exact method"
-    property).  Scalar networks only: a vector-valued ``net`` (d_out > 1)
-    raises instead of silently supervising the first output component.
+    property).
     """
     if isinstance(op, str):
         op = get_operator(op)
-    net, eng = resolve_net_engine(params, net, engine, impl, activation)
-    if net.d_out != 1:
-        raise ValueError(
-            "pinn_loss supervises a scalar field u but the network has "
-            f"d_out={net.d_out}; slicing [:, 0] would silently drop the other "
-            "components.  Use a d_out=1 network (vector-valued PDE systems "
-            "are a ROADMAP item).")
+    eng = DerivativeEngine.from_spec(engine)
     r = op.residual(pts, build_table(net, params, eng, op, pts))
     l_res = jnp.mean(r ** 2)
-    ub = net.apply(params, bc_pts)[:, 0]
-    l_bc = jnp.mean((ub - bc_vals) ** 2)
+    ub = net.apply(params, bc_pts)                       # (Nb, d_out)
+    bv = jnp.asarray(bc_vals)
+    if bv.ndim == 1:
+        bv = bv[:, None]
+    if bv.shape != ub.shape:
+        raise ValueError(
+            f"bc_vals shape {bv.shape} does not match the network's boundary "
+            f"output {ub.shape}; systems need one column per component")
+    l_bc = jnp.mean((ub - bv) ** 2)
     loss = weights.residual * l_res + weights.bc * l_bc
     return loss, {"residual": l_res, "bc": l_bc}
 
@@ -77,17 +82,16 @@ def pinn_loss(params, *, op: Union[Operator, str], pts: jnp.ndarray,
 # the self-similar Burgers objective (paper section IV-C)
 # ---------------------------------------------------------------------------
 
-def _burgers_engine(engine: Union[str, DerivativeEngine],
-                    impl: str) -> Tuple[str, str]:
+def _burgers_engine(engine: Union[str, DerivativeEngine]) -> Tuple[str, str]:
     """The specialized Burgers jet pipeline predates the engine objects;
-    normalize any accepted engine form back to its ("ntp"|"autodiff", impl)
-    string pair."""
-    from repro.core.engines import AutodiffEngine, NTPEngine, resolve_engine
-    eng = resolve_engine(engine, impl)
+    normalize a spec string or engine instance back to its
+    ("ntp"|"autodiff", impl) string pair."""
+    from repro.core.engines import AutodiffEngine, DerivativeEngine, NTPEngine
+    eng = DerivativeEngine.from_spec(engine)
     if isinstance(eng, NTPEngine):
         return "ntp", eng.impl
     if isinstance(eng, AutodiffEngine):
-        return "autodiff", impl
+        return "autodiff", "jnp"
     raise ValueError(f"burgers objective supports the ntp and autodiff "
                      f"engines, not {eng.spec!r}")
 
@@ -103,13 +107,13 @@ def burgers_pinn_loss(params: MLPParams, lam_raw: jnp.ndarray, *, k: int,
                       pts: jnp.ndarray, origin_pts: jnp.ndarray, domain: float,
                       order: int, weights: LossWeights,
                       lam_window: Tuple[float, float], engine: str = "ntp",
-                      impl: str = "jnp", activation: str = "tanh",
+                      activation: str = "tanh",
                       bc_vals: Tuple[float, float] = None) -> Tuple[jnp.ndarray, Dict]:
-    """Full self-similar Burgers objective.  ``engine``: "ntp" (quasilinear,
-    ours) or "autodiff" (the paper's baseline), as a string, spec
-    ("ntp/pallas"), or :class:`DerivativeEngine` instance.  Everything else
-    is identical, so the benchmark isolates the derivative engine."""
-    engine, impl = _burgers_engine(engine, impl)
+    """Full self-similar Burgers objective.  ``engine``: a spec string
+    ("ntp", "ntp/pallas", "autodiff") or :class:`DerivativeEngine` instance.
+    Everything else is identical, so the benchmark isolates the derivative
+    engine."""
+    engine, impl = _burgers_engine(engine)
     lo, hi = lam_window
     lam = lo + (hi - lo) * jax.nn.sigmoid(lam_raw)
 

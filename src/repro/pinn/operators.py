@@ -7,7 +7,7 @@ against a derivative table and runs through every
 :class:`repro.core.engines.DerivativeEngine` and every jet-traceable
 :class:`repro.core.network.Network`:
 
-* ``residual_values(params, op, x, engine=NTPEngine("pallas"), net=...)`` --
+* ``residual_values(params, op, x, net=..., engine=NTPEngine("pallas"))`` --
   any engine (ntp jnp/pallas, autodiff baseline, jax.experimental.jet
   oracle) x any network (DenseMLP, MLP, ResidualMLP, FourierFeatureMLP);
 * the same residual applied to an *analytic* function via
@@ -15,30 +15,39 @@ against a derivative table and runs through every
   solution becomes a test oracle (method of manufactured solutions: the
   residual of the exact solution must vanish identically).
 
-The pre-redesign string keywords (``engine="ntp", impl="pallas",
-activation="tanh"`` on a bare ``MLPParams``) still work through
-:func:`resolve_net_engine` for one release.
+The whole surface is vector-valued: an :class:`Operator` carries ``d_out``
+(the number of unknown field components) and its residual may return one
+equation (``(N,)``) or a stacked system (``(n_eq, N)``).  The
+:class:`DerivTable` indexes components -- ``d(axis, k, comp=c)`` and
+``d.mixed(*axes, comp=c)`` -- with ``comp=0`` the default so every scalar
+residual reads exactly as the math.
 
 An :class:`Operator` declares its input dimension, the highest pure-
 derivative order it consumes, the mixed partials it needs (``mixed``, a
 tuple of axis tuples -- served through polarization, ``engine.cross``), a
-residual ``R(x, d)`` where ``d(axis, k)`` returns the k-th pure derivative
-and ``d.mixed(*axes)`` a declared mixed partial, and an exact solution over
-its default domain box.  Registered operators:
+residual ``R(x, d)``, and an exact solution over its default domain box
+(shape (N,) for scalar operators, (N, d_out) for systems).  Registered:
 
-===================  ====  =====  ========================================
-name                 d_in  order  residual
-===================  ====  =====  ========================================
-heat                  2     2     u_t - nu u_xx
-wave                  2     2     u_tt - c^2 u_xx
-kdv                   2     3     u_t + 6 u u_x + u_xxx
-allen-cahn            2     2     u_t - eps u_xx + u^3 - u - f(t, x)
-poisson2d             2     2     u_xx + u_yy - f(x, y)
-advection-diffusion   3     2     u_t + a.grad u - div(D grad u) - f, with
-                                  rotated anisotropic D (genuine u_xy term)
-burgers               1     1     -lam u + ((1 + lam) x + u) u'  (self-
-                                  similar ODE)
-===================  ====  =====  ========================================
+===================  ====  =====  =====  =================================
+name                 d_in  d_out  order  residual
+===================  ====  =====  =====  =================================
+heat                  2     1      2     u_t - nu u_xx
+wave                  2     1      2     u_tt - c^2 u_xx
+kdv                   2     1      3     u_t + 6 u u_x + u_xxx
+allen-cahn            2     1      2     u_t - eps u_xx + u^3 - u - f(t, x)
+poisson2d             2     1      2     u_xx + u_yy - f(x, y)
+advection-diffusion   3     1      2     u_t + a.grad u - div(D grad u) - f,
+                                         rotated anisotropic D (u_xy term)
+navier-stokes         2     1      4     steady streamfunction-vorticity:
+                                         nu lap^2 psi + psi_y d_x(lap psi)
+                                         - psi_x d_y(lap psi) - f
+                                         (psi_xxyy via 4th-order
+                                         polarization)
+gray-scott            2     2      2     coupled reaction-diffusion system,
+                                         one residual per component
+burgers               1     1      1     -lam u + ((1 + lam) x + u) u'
+                                         (self-similar ODE)
+===================  ====  =====  =====  =================================
 
 New PDEs register with :func:`register`; see README.md for a walkthrough.
 """
@@ -52,7 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engines import DerivativeEngine, resolve_engine
+from repro.core.engines import DerivativeEngine
 from repro.core.network import DenseMLP, Network
 from repro.core.ntp import MLPParams
 
@@ -60,27 +69,57 @@ from repro.core.ntp import MLPParams
 class DerivTable:
     """Pointwise derivative lookup handed to ``Operator.residual``.
 
-    ``d(axis, k)`` -> (N,) raw k-th pure derivative of u along input ``axis``;
-    ``d.mixed(*axes)`` -> (N,) mixed partial for an axis tuple the operator
-    declared in ``Operator.mixed`` (order within the tuple is irrelevant:
-    partials commute for smooth networks).
+    ``d(axis, k, comp=c)`` -> (N,) raw k-th pure derivative of component
+    ``c`` of u along input ``axis``; ``d.mixed(*axes, comp=c)`` -> (N,)
+    mixed partial for an axis tuple the operator declared in
+    ``Operator.mixed`` (order within the tuple is irrelevant: partials
+    commute for smooth networks).  ``comp`` defaults to 0, so scalar
+    residuals never mention it; systems (d_out > 1) address each unknown
+    field by its component index.
+
+    ``pure`` is stored with a trailing component axis (d_in, order+1, N,
+    d_out); a rank-3 array (the pre-vector layout) is promoted to a single
+    component, and mixed entries of shape (N,) likewise.
     """
 
     def __init__(self, pure: jnp.ndarray,
                  mixed: Dict[Tuple[int, ...], jnp.ndarray] | None = None):
-        self._pure = pure               # (d_in, order+1, N)
-        self._mixed = mixed or {}
+        if pure.ndim == 3:
+            pure = pure[..., None]
+        self._pure = pure               # (d_in, order+1, N, d_out)
+        self._mixed = {k: (v[:, None] if v.ndim == 1 else v)
+                       for k, v in (mixed or {}).items()}
 
-    def __call__(self, axis: int, k: int) -> jnp.ndarray:
-        return self._pure[axis, k]
+    @property
+    def n_components(self) -> int:
+        return self._pure.shape[-1]
 
-    def mixed(self, *axes: int) -> jnp.ndarray:
+    def _check_comp(self, comp: int) -> None:
+        # indices here are Python ints; without this, jnp's clamping
+        # semantics would silently serve the last component for an
+        # out-of-range comp (wrong physics with green tests)
+        if not 0 <= comp < self.n_components:
+            raise IndexError(
+                f"comp={comp} out of range for a table with "
+                f"{self.n_components} component(s)")
+
+    def __call__(self, axis: int, k: int, comp: int = 0) -> jnp.ndarray:
+        self._check_comp(comp)
+        d_in, orders = self._pure.shape[:2]
+        if not (0 <= axis < d_in and 0 <= k < orders):
+            raise IndexError(
+                f"d(axis={axis}, k={k}) out of range for a table over "
+                f"d_in={d_in} axes and orders 0..{orders - 1}")
+        return self._pure[axis, k, :, comp]
+
+    def mixed(self, *axes: int, comp: int = 0) -> jnp.ndarray:
+        self._check_comp(comp)
         key = tuple(sorted(axes))
         if key not in self._mixed:
             raise KeyError(
                 f"mixed partial {key} was not precomputed; declare it in the "
                 f"operator's ``mixed=`` field (have: {tuple(self._mixed)})")
-        return self._mixed[key]
+        return self._mixed[key][:, comp]
 
 
 @dataclass(frozen=True)
@@ -88,12 +127,17 @@ class Operator:
     """A differential operator with a manufactured/exact solution oracle.
 
     ``residual(x, d)`` consumes collocation points ``x`` of shape
-    (N, d_in) and a :class:`DerivTable`; it returns the pointwise residual
-    (N,).  ``mixed`` lists the axis tuples of every ``d.mixed(...)`` lookup
+    (N, d_in) and a :class:`DerivTable`; it returns the pointwise residual --
+    (N,) for a single equation, or (n_eq, N) for a multi-equation system
+    (one row per equation; losses take the mean square over everything).
+    ``d_out`` is the number of unknown field components the residual reads
+    from the table (``comp=`` indexing); the solving network must match.
+    ``mixed`` lists the axis tuples of every ``d.mixed(...)`` lookup
     the residual performs, so engines can precompute them (one polarization
-    batch each).  ``exact(x)`` is the solution the residual vanishes on; it
-    doubles as boundary/initial data for training and as the accuracy oracle
-    in tests.  ``differentiable_exact`` is False when ``exact`` is not a pure
+    batch each).  ``exact(x)`` is the solution the residual vanishes on --
+    (N,) for scalar operators, (N, d_out) for systems; it doubles as
+    boundary/initial data for training and as the accuracy oracle in tests.
+    ``differentiable_exact`` is False when ``exact`` is not a pure
     jax function (e.g. the Burgers profile's bisection inversion), which
     excludes it from autodiff-based oracle checks only.
     """
@@ -107,6 +151,7 @@ class Operator:
     description: str = ""
     differentiable_exact: bool = True
     mixed: Tuple[Tuple[int, ...], ...] = ()
+    d_out: int = 1
 
 
 _REGISTRY: Dict[str, Operator] = {}
@@ -118,6 +163,8 @@ def register(op: Operator) -> Operator:
     if len(op.domain) != op.d_in:
         raise ValueError(f"operator {op.name!r}: domain rank {len(op.domain)} "
                          f"!= d_in {op.d_in}")
+    if op.d_out < 1:
+        raise ValueError(f"operator {op.name!r}: d_out must be >= 1")
     for axes in op.mixed:
         if any(a < 0 or a >= op.d_in for a in axes):
             raise ValueError(f"operator {op.name!r}: mixed axes {axes} out of "
@@ -137,53 +184,57 @@ def operator_names() -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
-# network/engine resolution (the deprecation shim) and residual assembly
+# residual assembly
 # ---------------------------------------------------------------------------
 
-def resolve_net_engine(params, net: Network | None,
-                       engine: Union[str, DerivativeEngine],
-                       impl: str | None, activation: str
-                       ) -> Tuple[Network, DerivativeEngine]:
-    """New-style callers pass ``net=`` + an engine object/spec; old-style
-    callers pass a bare ``MLPParams`` with ``engine=``/``impl=``/
-    ``activation=`` strings, for which a :class:`DenseMLP` view is
-    reconstructed from the parameter shapes."""
-    if net is None:
-        if not isinstance(params, MLPParams):
-            raise TypeError(
-                "params is not an MLPParams; pass the owning network via "
-                "net= (any repro.core.network.Network)")
-        net = DenseMLP.from_params(params, activation)
-    return net, resolve_engine(engine, impl)
-
-
-def _check_scalar(net: Network, what: str) -> None:
-    if net.d_out != 1:
+def check_net_matches(net: Network, op: Operator) -> None:
+    if net.d_out != op.d_out:
         raise ValueError(
-            f"{what} consumes a scalar field u (net.d_out == 1); got "
-            f"d_out={net.d_out}.  Vector-valued PDE systems need per-"
-            "component operators (see ROADMAP).")
+            f"operator {op.name!r} solves for {op.d_out} field component(s) "
+            f"but the network has d_out={net.d_out}; build the network with "
+            f"d_out={op.d_out}")
+    if net.d_in != op.d_in:
+        raise ValueError(
+            f"operator {op.name!r} lives on d_in={op.d_in} coordinates but "
+            f"the network has d_in={net.d_in}")
 
 
 def build_table(net: Network, params, engine: DerivativeEngine,
                 op: Operator, x: jnp.ndarray) -> DerivTable:
     """Everything the residual will look up, precomputed in batched engine
     calls: one ``grid`` for pure derivatives plus one polarization ``cross``
-    per declared mixed partial."""
-    _check_scalar(net, f"operator {op.name!r}")
-    pure = engine.grid(net, params, x, op.order)[..., 0]     # (d_in, n+1, N)
-    mixed = {tuple(sorted(a)): engine.cross(net, params, x, a)[:, 0]
+    per declared mixed partial.  The component axis rides along for free:
+    the grid's trailing ``d_out`` axis becomes the table's ``comp=`` index."""
+    check_net_matches(net, op)
+    pure = engine.grid(net, params, x, op.order)   # (d_in, n+1, N, d_out)
+    mixed = {tuple(sorted(a)): engine.cross(net, params, x, a)   # (N, d_out)
              for a in op.mixed}
     return DerivTable(pure, mixed)
 
 
 def residual_values(params, op: Operator, x: jnp.ndarray, *,
-                    engine: Union[str, DerivativeEngine] = "ntp",
-                    activation: str = "tanh", impl: str = "jnp",
-                    net: Network | None = None) -> jnp.ndarray:
-    """Pointwise residual (N,) of the network under ``op``."""
-    net, eng = resolve_net_engine(params, net, engine, impl, activation)
+                    net: Network,
+                    engine: Union[str, DerivativeEngine] = "ntp"
+                    ) -> jnp.ndarray:
+    """Pointwise residual of ``net`` under ``op``: (N,) for single-equation
+    operators, (n_eq, N) for systems."""
+    eng = DerivativeEngine.from_spec(engine)
     return op.residual(x, build_table(net, params, eng, op, x))
+
+
+def exact_values(op: Operator, x, dtype=None) -> jnp.ndarray:
+    """``op.exact`` normalized to (N, d_out) (exact solutions may be
+    numpy-backed and scalar operators return (N,))."""
+    vals = jnp.asarray(np.asarray(op.exact(x)))
+    if dtype is not None:
+        vals = vals.astype(dtype)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if vals.shape != (x.shape[0], op.d_out):
+        raise ValueError(
+            f"operator {op.name!r}: exact() returned shape {vals.shape}, "
+            f"want ({x.shape[0]}, {op.d_out})")
+    return vals
 
 
 # ---------------------------------------------------------------------------
@@ -226,10 +277,19 @@ def autodiff_mixed_partial_fn(fn: Callable[[jnp.ndarray], jnp.ndarray],
 
 def residual_of_fn(op: Operator, fn: Callable[[jnp.ndarray], jnp.ndarray],
                    x: jnp.ndarray) -> jnp.ndarray:
-    """Residual of an arbitrary differentiable scalar function (the MMS oracle:
-    ``residual_of_fn(op, exact, x) == 0`` certifies the operator's algebra)."""
-    pure = autodiff_pure_derivs_fn(fn, x, op.order)
-    mixed = {tuple(sorted(a)): autodiff_mixed_partial_fn(fn, x, a)
+    """Residual of an arbitrary differentiable function (the MMS oracle:
+    ``residual_of_fn(op, exact, x) == 0`` certifies the operator's algebra).
+
+    ``fn`` maps a single point (d_in,) to a scalar for ``d_out == 1``
+    operators, or to a (d_out,) vector for systems; each component gets its
+    own autodiff tower and the stack fills the table's component axis."""
+    comps = [fn] if op.d_out == 1 else \
+        [lambda xi, c=c: fn(xi)[c] for c in range(op.d_out)]
+    pure = jnp.stack([autodiff_pure_derivs_fn(f, x, op.order)
+                      for f in comps], axis=-1)
+    mixed = {tuple(sorted(a)):
+             jnp.stack([autodiff_mixed_partial_fn(f, x, a) for f in comps],
+                       axis=-1)
              for a in op.mixed}
     return op.residual(x, DerivTable(pure, mixed))
 
@@ -419,6 +479,129 @@ def burgers_operator(lam: float = 0.5, k: int = 1,
         description="-lam u + ((1+lam) X + u) u';  exact implicit profile",
         differentiable_exact=False,
     )
+
+
+# -- steady Navier-Stokes in streamfunction-vorticity form ------------------
+#
+# Eliminating pressure and enforcing incompressibility exactly via the
+# streamfunction (u, v) = (psi_y, -psi_x) turns 2-D steady Navier-Stokes
+# into ONE scalar 4th-order equation:
+#
+#     nu lap^2 psi + psi_y d_x(lap psi) - psi_x d_y(lap psi) = f
+#
+# with lap^2 psi = psi_xxxx + 2 psi_xxyy + psi_yyyy.  The psi_xxyy term is a
+# 4th-order mixed partial -- the first consumer of the polarization identity
+# beyond order 2 (16 directional order-4 jets); d_x/d_y of the Laplacian add
+# third-order mixed terms psi_xyy and psi_xxy (8 order-3 jets each).
+
+NS_NU = 0.5
+NS_A = 0.3
+
+
+def _ns_psi(xi):
+    # mixes Laplacian eigenfunctions with different eigenvalues (-2 and -5);
+    # a single eigenfunction would make the advection Jacobian
+    # J(psi, lap psi) vanish identically and leave the nonlinearity untested
+    return (jnp.sin(xi[0]) * jnp.sin(xi[1])
+            + NS_A * jnp.sin(2.0 * xi[0]) * jnp.sin(xi[1]))
+
+
+def _ns_forcing(x):
+    # closed-form forcing for psi* = s1 + a s2 with s1 = sin x sin y
+    # (lap s1 = -2 s1) and s2 = sin 2x sin y (lap s2 = -5 s2):
+    #   lap^2 psi* = 4 s1 + 25 a s2
+    #   d_x lap psi* = -2 cos x sin y - 10 a cos 2x sin y
+    #   d_y lap psi* = -2 sin x cos y -  5 a sin 2x cos y
+    # (kept closed-form -- and params-independent -- so the jitted residual
+    # never embeds autodiff towers of the manufactured solution; the MMS
+    # test cross-checks this algebra against independent autodiff towers)
+    a = NS_A
+    sx, cx = jnp.sin(x[:, 0]), jnp.cos(x[:, 0])
+    sy, cy = jnp.sin(x[:, 1]), jnp.cos(x[:, 1])
+    s2x, c2x = jnp.sin(2.0 * x[:, 0]), jnp.cos(2.0 * x[:, 0])
+    psi_x = cx * sy + 2.0 * a * c2x * sy
+    psi_y = sx * cy + a * s2x * cy
+    lap_x = -2.0 * cx * sy - 10.0 * a * c2x * sy
+    lap_y = -2.0 * sx * cy - 5.0 * a * s2x * cy
+    bih = 4.0 * sx * sy + 25.0 * a * s2x * sy
+    return NS_NU * bih + psi_y * lap_x - psi_x * lap_y
+
+
+def _ns_residual(x, d):
+    psi_x, psi_y = d(0, 1), d(1, 1)
+    lap_x = d(0, 3) + d.mixed(0, 1, 1)           # d/dx lap psi
+    lap_y = d.mixed(0, 0, 1) + d(1, 3)           # d/dy lap psi
+    bih = d(0, 4) + 2.0 * d.mixed(0, 0, 1, 1) + d(1, 4)
+    return NS_NU * bih + psi_y * lap_x - psi_x * lap_y - _ns_forcing(x)
+
+
+def _ns_exact(x):
+    return jax.vmap(_ns_psi)(x)
+
+
+register(Operator(
+    name="navier-stokes", d_in=2, order=4,
+    residual=_ns_residual, exact=_ns_exact,
+    domain=((0.0, _PI), (0.0, _PI)),
+    mixed=((0, 0, 1), (0, 1, 1), (0, 0, 1, 1)),
+    description="steady Navier-Stokes, streamfunction form: nu lap^2 psi "
+                "+ psi_y d_x(lap psi) - psi_x d_y(lap psi) - f;  manufactured "
+                "psi = sin x sin y + 0.3 sin 2x sin y",
+))
+
+
+# -- Gray-Scott reaction-diffusion: the first d_out = 2 system --------------
+#
+#     u_t = Du u_xx - u v^2 + F (1 - u)        + f_u
+#     v_t = Dv v_xx + u v^2 - (F + kappa) v    + f_v
+#
+# on (t, x).  Two coupled unknown fields solved by ONE d_out=2 network; the
+# residual reads each component out of the shared derivative table
+# (d(axis, k, comp=...)), so both components' derivatives come from the same
+# batched jet forwards.  Forcings are manufactured so (u*, v*) below solves
+# the system exactly.
+
+GS_DU, GS_DV = 0.16, 0.08
+GS_F, GS_KAPPA = 0.9, 0.6
+
+
+def _gs_exact(x):
+    t, s = x[:, 0], x[:, 1]
+    u = 1.0 - 0.5 * jnp.exp(-t) * jnp.sin(s)
+    v = 0.8 * jnp.exp(-t) * jnp.cos(s)
+    return jnp.stack([u, v], axis=-1)
+
+
+def _gs_forcing(x):
+    # u* = 1 - 0.5 e^-t sin x:  u*_t = u*_xx = 0.5 e^-t sin x
+    # v* = 0.8 e^-t cos x:      v*_t = v*_xx = -v*
+    t, s = x[:, 0], x[:, 1]
+    e = jnp.exp(-t)
+    u, ut_uxx = 1.0 - 0.5 * e * jnp.sin(s), 0.5 * e * jnp.sin(s)
+    v = 0.8 * e * jnp.cos(s)
+    f_u = ut_uxx - GS_DU * ut_uxx + u * v ** 2 - GS_F * (1.0 - u)
+    f_v = -v + GS_DV * v - u * v ** 2 + (GS_F + GS_KAPPA) * v
+    return f_u, f_v
+
+
+def _gs_residual(x, d):
+    u, v = d(0, 0, comp=0), d(0, 0, comp=1)
+    f_u, f_v = _gs_forcing(x)
+    r_u = (d(0, 1, comp=0) - GS_DU * d(1, 2, comp=0)
+           + u * v ** 2 - GS_F * (1.0 - u) - f_u)
+    r_v = (d(0, 1, comp=1) - GS_DV * d(1, 2, comp=1)
+           - u * v ** 2 + (GS_F + GS_KAPPA) * v - f_v)
+    return jnp.stack([r_u, r_v])
+
+
+register(Operator(
+    name="gray-scott", d_in=2, d_out=2, order=2,
+    residual=_gs_residual, exact=_gs_exact,
+    domain=((0.0, 1.0), (-_PI, _PI)),
+    description="Gray-Scott reaction-diffusion system (2 coupled fields, "
+                "one d_out=2 network);  manufactured u = 1 - 0.5 e^-t sin x, "
+                "v = 0.8 e^-t cos x",
+))
 
 
 register(burgers_operator())

@@ -16,18 +16,16 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-import numpy as np
-
-from repro.core.engines import DerivativeEngine, resolve_engine
+from repro.core.engines import DerivativeEngine
 from repro.core.network import Network, make_network
-from repro.core.ntp import MLPParams, init_mlp, mlp_apply, num_params
+from repro.core.ntp import MLPParams, init_mlp, num_params
 from repro.data.collocation import (boundary_grid, eval_grid, resample,
                                     sample_box, uniform_grid)
 from repro.optim import adam_init, adam_update, lbfgs
 
 from .burgers import lambda_window, profile_lambda, smoothness_order
 from .losses import LossWeights, bc_targets, burgers_pinn_loss, pinn_loss
-from .operators import Operator, get_operator
+from .operators import exact_values, get_operator
 
 
 @dataclass
@@ -42,8 +40,7 @@ class PINNRunConfig:
     adam_steps: int = 1500
     adam_lr: float = 2e-3
     lbfgs_steps: int = 300
-    engine: str = "ntp"             # "ntp" | "autodiff"
-    impl: str = "jnp"               # "jnp" | "pallas" (ntp only)
+    engine: str = "ntp"             # spec: "ntp" | "ntp/pallas" | "autodiff"
     activation: str = "tanh"
     weights: LossWeights = field(default_factory=LossWeights)
     seed: int = 0
@@ -87,7 +84,7 @@ def train(cfg: PINNRunConfig) -> PINNResult:
         return burgers_pinn_loss(p, lr, k=cfg.k, pts=pts, origin_pts=origin_pts,
                                  domain=cfg.domain, order=order,
                                  weights=cfg.weights, lam_window=window,
-                                 engine=cfg.engine, impl=cfg.impl,
+                                 engine=cfg.engine,
                                  activation=cfg.activation, bc_vals=bc_vals)
 
     vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
@@ -160,10 +157,11 @@ class OperatorRunConfig:
     """Training config for any registered differential operator.
 
     ``engine`` accepts a spec string ("ntp", "ntp/pallas", "autodiff") or a
-    :class:`DerivativeEngine` instance; the separate ``impl`` field is the
-    pre-redesign spelling and still honored.  ``network`` names a registered
+    :class:`DerivativeEngine` instance.  ``network`` names a registered
     architecture ("dense", "mlp", "residual", "fourier"); ``net_kwargs``
     passes architecture extras (e.g. ``{"n_features": 32}`` for fourier).
+    The network's output rank follows the operator (``op.d_out``), so
+    multi-equation systems like "gray-scott" train with no extra plumbing.
     """
 
     op: str = "heat"
@@ -178,7 +176,6 @@ class OperatorRunConfig:
     adam_lr: float = 2e-3
     lbfgs_steps: int = 0
     engine: str = "ntp"             # spec string or DerivativeEngine
-    impl: str = "jnp"               # legacy "jnp" | "pallas" (ntp only)
     weights: LossWeights = field(default_factory=LossWeights)
     seed: int = 0
     resample_every: int = 500
@@ -206,14 +203,14 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
     dtype = jnp.float64
     key = jax.random.PRNGKey(cfg.seed)
     k_init, k_pts = jax.random.split(key)
-    net = make_network(cfg.network, d_in=op.d_in, d_out=1, width=cfg.width,
-                       depth=cfg.depth, activation=cfg.activation,
-                       **cfg.net_kwargs)
-    engine = resolve_engine(cfg.engine, cfg.impl)
+    net = make_network(cfg.network, d_in=op.d_in, d_out=op.d_out,
+                       width=cfg.width, depth=cfg.depth,
+                       activation=cfg.activation, **cfg.net_kwargs)
+    engine = DerivativeEngine.from_spec(cfg.engine)
     params = net.init(k_init, dtype=dtype)
 
     bc_pts = boundary_grid(op.domain, cfg.n_bc, dtype)
-    bc_vals = jnp.asarray(np.asarray(op.exact(bc_pts)), dtype)
+    bc_vals = exact_values(op, bc_pts, dtype)
 
     def loss_fn(p, pts):
         return pinn_loss(p, op=op, pts=pts, bc_pts=bc_pts, bc_vals=bc_vals,
@@ -257,8 +254,8 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
         loss_hist.extend(res.loss_history)
 
     xe = eval_grid(op.domain, cfg.eval_pts_per_axis, dtype)
-    u_net = net.apply(params, xe)[:, 0]
-    u_true = jnp.asarray(np.asarray(op.exact(xe)), dtype)
+    u_net = net.apply(params, xe)                   # (N, d_out)
+    u_true = exact_values(op, xe, dtype)
     l2 = float(jnp.sqrt(jnp.mean((u_net - u_true) ** 2)))
 
     return OperatorResult(params=params, op_name=op.name,

@@ -14,7 +14,7 @@ from repro.core import jet as J
 from repro.core import (AutodiffEngine, DenseMLP, DerivativeEngine,
                         FourierFeatureMLP, JaxJetEngine, MLP, MLPParams,
                         NTPEngine, ResidualMLP, init_mlp, make_network,
-                        network_names, resolve_engine)
+                        network_names)
 from repro.pinn import (OperatorRunConfig, get_operator, pinn_loss,
                         residual_values, train_operator)
 from repro.data.collocation import boundary_grid, sample_box
@@ -95,7 +95,8 @@ def test_apply_matches_order_zero():
 
 
 # ---------------------------------------------------------------------------
-# spec parsing + the deprecation shim
+# spec parsing (the engine=/impl= deprecation shim is gone: spec strings and
+# engine instances are the only accepted forms)
 # ---------------------------------------------------------------------------
 
 def test_from_spec_round_trips():
@@ -114,37 +115,27 @@ def test_from_spec_round_trips():
         NTPEngine("cuda")
 
 
-def test_resolve_engine_accepts_legacy_pair():
-    assert resolve_engine("ntp", "pallas") == NTPEngine("pallas")
-    assert resolve_engine("ntp", None) == NTPEngine("jnp")
-    assert resolve_engine("autodiff", "jnp").spec == "autodiff"
-    eng = NTPEngine("pallas")
-    assert resolve_engine(eng, "jnp") is eng   # instance wins over impl
-
-
-def test_legacy_kwargs_match_engine_objects():
-    """The old string-triple call sites produce bit-identical residuals."""
+def test_legacy_shim_is_gone():
+    """ROADMAP scheduled the PR-2 deprecation shim for removal: the
+    engine=/impl= keyword pair and the bare-MLPParams reconstruction no
+    longer exist anywhere on the public surface."""
+    import repro.core as core
+    import repro.pinn as pinn
+    assert not hasattr(core, "resolve_engine")
+    assert not hasattr(pinn, "resolve_net_engine")
     op = get_operator("heat")
     params = init_mlp(jax.random.PRNGKey(0), 2, 10, 2, 1, dtype=jnp.float64)
     x = sample_box(jax.random.PRNGKey(1), op.domain, 8, jnp.float64)
-    old = residual_values(params, op, x, engine="ntp", impl="jnp",
-                          activation="tanh")
-    new = residual_values(params, op, x, engine=NTPEngine("jnp"),
-                          net=DenseMLP(2, 10, 2, 1))
-    np.testing.assert_allclose(old, new, rtol=0, atol=0)
+    with pytest.raises(TypeError):
+        residual_values(params, op, x, engine="ntp", impl="jnp")
+    with pytest.raises(TypeError):            # net= is now required
+        residual_values(params, op, x)
+    residual_values(params, op, x, net=DenseMLP(2, 10, 2, 1))  # new form ok
 
 
-def test_non_mlpparams_require_explicit_net():
-    op = get_operator("heat")
-    net = ResidualMLP(2, 8, 1, 1)
-    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
-    x = sample_box(jax.random.PRNGKey(1), op.domain, 4, jnp.float64)
-    with pytest.raises(TypeError, match="net="):
-        residual_values(params, op, x)          # dict params, no net
-    residual_values(params, op, x, net=net)     # ok with the owning net
-
-
-def test_pinn_loss_rejects_vector_networks():
+def test_net_must_match_operator_rank():
+    """d_out/d_in mismatches raise up front instead of mis-slicing; matched
+    vector networks flow through (the old d_out > 1 ValueError is gone)."""
     op = get_operator("heat")
     net = MLP((2, 8, 2))
     params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
@@ -153,6 +144,11 @@ def test_pinn_loss_rejects_vector_networks():
     with pytest.raises(ValueError, match="d_out=2"):
         pinn_loss(params, op=op, pts=x, bc_pts=bc,
                   bc_vals=jnp.zeros(bc.shape[0]), net=net)
+    with pytest.raises(ValueError, match="d_in"):
+        residual_values(params, op, sample_box(jax.random.PRNGKey(1),
+                                               ((0, 1),) * 3, 4, jnp.float64),
+                        net=MLP((3, 8, 1)),
+                        engine="ntp")
 
 
 def test_network_registry():

@@ -1,7 +1,8 @@
 """Differential-operator subsystem: every registered PDE against three
 oracles -- nested-autodiff derivative towers, the manufactured/exact solution
 (method of manufactured solutions), and the pallas kernel path -- plus the
-polarization identity for mixed partials."""
+polarization identity for mixed partials, now including the 4th-order
+Navier-Stokes streamfunction terms and the d_out=2 Gray-Scott system."""
 
 import jax
 import jax.numpy as jnp
@@ -9,47 +10,75 @@ import numpy as np
 import pytest
 
 from repro.core import jet as J
-from repro.core.engines import AutodiffEngine, NTPEngine
+from repro.core.engines import AutodiffEngine, DerivativeEngine, NTPEngine
 from repro.core.network import DenseMLP
 from repro.core.ntp import cross, init_mlp, mlp_apply
 from repro.data.collocation import boundary_grid, eval_grid, sample_box
 from repro.pinn import (DerivTable, LossWeights, OperatorRunConfig,
                         autodiff_mixed_partial_fn, burgers_operator,
-                        get_operator, operator_names, pinn_loss, register,
-                        residual_jet, residual_of_fn, residual_values,
-                        train_operator)
+                        exact_values, get_operator, operator_names, pinn_loss,
+                        register, residual_jet, residual_of_fn,
+                        residual_values, train_operator)
 
-NEW_OPS = ("heat", "wave", "kdv", "allen-cahn", "poisson2d",
-           "advection-diffusion")
-ALL_OPS = NEW_OPS + ("burgers",)
+SCALAR_OPS = ("heat", "wave", "kdv", "allen-cahn", "poisson2d",
+              "advection-diffusion", "navier-stokes")
+SYSTEM_OPS = ("gray-scott",)
+DIFFABLE_OPS = SCALAR_OPS + SYSTEM_OPS          # analytic, jax-differentiable
+ALL_OPS = DIFFABLE_OPS + ("burgers",)
+
+ENGINE_SPECS = ("ntp", "ntp/pallas", "autodiff")
 
 
 def _net_and_pts(name, n=7, dtype=jnp.float64, width=12, depth=3, seed=0):
     op = get_operator(name)
-    params = init_mlp(jax.random.PRNGKey(seed), op.d_in, width, depth, 1,
-                      dtype=dtype)
+    net = DenseMLP(op.d_in, width, depth, op.d_out)
+    params = init_mlp(jax.random.PRNGKey(seed), op.d_in, width, depth,
+                      op.d_out, dtype=dtype)
     x = sample_box(jax.random.PRNGKey(seed + 1), op.domain, n, dtype)
-    return op, params, x
+    return op, net, params, x
+
+
+def _exact_fn(op):
+    """op.exact as a per-point function: (d_in,) -> () or (d_out,)."""
+    return lambda xi: op.exact(xi[None, :])[0]
 
 
 # ---------------------------------------------------------------------------
-# oracle 1: nested autodiff
+# oracle 1: nested autodiff -- the full registry sweep across every engine
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("name", ALL_OPS)
 def test_residual_ntp_matches_autodiff(name):
-    op, params, x = _net_and_pts(name)
-    ours = residual_values(params, op, x, engine="ntp")
-    ref = residual_values(params, op, x, engine="autodiff")
+    op, net, params, x = _net_and_pts(name)
+    ours = residual_values(params, op, x, net=net, engine="ntp")
+    ref = residual_values(params, op, x, net=net, engine="autodiff")
     np.testing.assert_allclose(ours, ref, rtol=1e-8, atol=1e-9)
+
+
+@pytest.mark.parametrize("spec", ENGINE_SPECS)
+@pytest.mark.parametrize("name", ALL_OPS)
+def test_registry_sweep_all_engines(name, spec):
+    """Acceptance sweep: EVERY registered operator (systems included) runs
+    under every engine spec at smoke shapes and matches the nested-autodiff
+    oracle.  The pallas path gets float-precision-scale tolerance (its
+    kernels accumulate differently), the jnp paths double-precision-scale."""
+    op, net, params, x = _net_and_pts(name, n=6, width=8, depth=2)
+    got = residual_values(params, op, x, net=net,
+                          engine=DerivativeEngine.from_spec(spec))
+    ref = residual_values(params, op, x, net=net, engine="autodiff")
+    tol = dict(rtol=2e-5, atol=2e-6) if spec == "ntp/pallas" \
+        else dict(rtol=1e-8, atol=1e-9)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, **tol)
 
 
 @pytest.mark.parametrize("name", ("heat", "kdv"))
 @pytest.mark.parametrize("activation", ("tanh", "sin"))
 def test_residual_engines_agree_across_activations(name, activation):
-    op, params, x = _net_and_pts(name)
-    ours = residual_values(params, op, x, engine="ntp", activation=activation)
-    ref = residual_values(params, op, x, engine="autodiff", activation=activation)
+    op, _, params, x = _net_and_pts(name)
+    net = DenseMLP(op.d_in, 12, 3, op.d_out, activation=activation)
+    ours = residual_values(params, op, x, net=net, engine="ntp")
+    ref = residual_values(params, op, x, net=net, engine="autodiff")
     np.testing.assert_allclose(ours, ref, rtol=1e-8, atol=1e-9)
 
 
@@ -57,14 +86,13 @@ def test_residual_engines_agree_across_activations(name, activation):
 # oracle 2: manufactured / exact solutions (residual must vanish identically)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", NEW_OPS)
+@pytest.mark.parametrize("name", DIFFABLE_OPS)
 def test_residual_vanishes_on_exact_solution(name):
     op = get_operator(name)
     assert op.differentiable_exact
     x = sample_box(jax.random.PRNGKey(7), op.domain, 64, jnp.float64)
-    fn = lambda xi: op.exact(xi[None, :])[0]
-    r = residual_of_fn(op, fn, x)
-    assert float(jnp.max(jnp.abs(r))) < 1e-10
+    r = residual_of_fn(op, _exact_fn(op), x)
+    assert float(jnp.max(jnp.abs(r))) < 1e-9
 
 
 def test_burgers_exact_solution_vanishes_via_finite_differences():
@@ -75,17 +103,64 @@ def test_burgers_exact_solution_vanishes_via_finite_differences():
     u = np.asarray(op.exact(jnp.asarray(xs)[:, None]))
     du = np.gradient(u, xs)
     D = jnp.asarray(np.stack([u, du])[None])          # (1 axis, 2 orders, N)
-    r = op.residual(jnp.asarray(xs)[:, None], lambda a, k: D[a, k])
+    r = op.residual(jnp.asarray(xs)[:, None], DerivTable(D))
     assert float(jnp.max(jnp.abs(r[5:-5]))) < 5e-3    # FD error only
 
 
 def test_burgers_operator_matches_residual_jet():
     """The registered operator computes the same residual as the specialized
     Burgers jet pipeline (losses.burgers_pinn_loss's engine)."""
-    op, params, x = _net_and_pts("burgers")
-    ours = residual_values(params, op, x, engine="ntp")
+    op, net, params, x = _net_and_pts("burgers")
+    ours = residual_values(params, op, x, net=net, engine="ntp")
     ref = J.derivatives(residual_jet(params, 0.5, x, 1))[0, :, 0]
     np.testing.assert_allclose(ours, ref, rtol=1e-10, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# the two new systems: Navier-Stokes streamfunction + Gray-Scott
+# ---------------------------------------------------------------------------
+
+def test_navier_stokes_consumes_4th_order_polarization():
+    """psi_xxyy reaches the residual through a 4th-order polarization cross
+    (16 directional order-4 jets) and matches direct nested-grad partials;
+    zeroing it must change the residual (the biharmonic genuinely couples)."""
+    op, net, params, x = _net_and_pts("navier-stokes", n=5, width=10, depth=2)
+    eng = NTPEngine("jnp")
+    ours = eng.cross(net, params, x, (0, 0, 1, 1))[:, 0]
+    fn = lambda xi: mlp_apply(params, xi[None, :], unroll=True)[0, 0]
+    ref = autodiff_mixed_partial_fn(fn, x, (0, 0, 1, 1))
+    np.testing.assert_allclose(ours, ref, rtol=1e-7, atol=1e-8)
+
+    from repro.pinn.operators import build_table
+    table = build_table(net, params, eng, op, x)
+    r_full = op.residual(x, table)
+    zeroed = dict(table._mixed)
+    zeroed[(0, 0, 1, 1)] = jnp.zeros_like(zeroed[(0, 0, 1, 1)])
+    r_nomix = op.residual(x, DerivTable(table._pure, zeroed))
+    assert float(jnp.max(jnp.abs(r_full - r_nomix))) > 1e-6
+
+
+def test_gray_scott_component_axis():
+    """The d_out=2 residual reads both fields from one shared table; swapping
+    the network's output columns must change both equations."""
+    op, net, params, x = _net_and_pts("gray-scott", n=6, width=10, depth=2)
+    r = residual_values(params, op, x, net=net, engine="ntp")
+    assert r.shape == (2, x.shape[0])
+    swapped = params._replace(w_out=params.w_out[:, ::-1],
+                              b_out=params.b_out[::-1])
+    r_sw = residual_values(swapped, op, x, net=net, engine="ntp")
+    assert float(jnp.max(jnp.abs(r - r_sw))) > 1e-6
+
+
+def test_gray_scott_exact_values_shape():
+    op = get_operator("gray-scott")
+    x = sample_box(jax.random.PRNGKey(0), op.domain, 9, jnp.float64)
+    vals = exact_values(op, x)
+    assert vals.shape == (9, 2)
+    # scalar operators normalize to a single column
+    heat = get_operator("heat")
+    xh = sample_box(jax.random.PRNGKey(1), heat.domain, 5, jnp.float64)
+    assert exact_values(heat, xh).shape == (5, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -93,15 +168,17 @@ def test_burgers_operator_matches_residual_jet():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("name", ("heat", "kdv", "burgers",
-                                  "advection-diffusion"))
+                                  "advection-diffusion", "navier-stokes",
+                                  "gray-scott"))
 def test_pallas_impl_matches_jnp(name):
     op = get_operator(name)
-    params = init_mlp(jax.random.PRNGKey(0), op.d_in, 16, 3, 1,
+    net = DenseMLP(op.d_in, 16, 3, op.d_out)
+    params = init_mlp(jax.random.PRNGKey(0), op.d_in, 16, 3, op.d_out,
                       dtype=jnp.float32)
     x = sample_box(jax.random.PRNGKey(1), op.domain, 16, jnp.float32)
-    a = residual_values(params, op, x, engine="ntp", impl="jnp")
-    b = residual_values(params, op, x, engine="ntp", impl="pallas")
-    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+    a = residual_values(params, op, x, net=net, engine="ntp")
+    b = residual_values(params, op, x, net=net, engine="ntp/pallas")
+    np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -111,8 +188,7 @@ def test_pallas_impl_matches_jnp(name):
 def test_advection_diffusion_consumes_cross_polarization():
     """The u_xy term reaches the residual through engine.cross (polarization
     of directional jets) and matches a direct nested-grad mixed partial."""
-    op, params, x = _net_and_pts("advection-diffusion")
-    net = DenseMLP.from_params(params)
+    op, net, params, x = _net_and_pts("advection-diffusion")
     ours = NTPEngine("jnp").cross(net, params, x, (1, 2))[:, 0]
     fn = lambda xi: mlp_apply(params, xi[None, :], unroll=True)[0, 0]
     ref = autodiff_mixed_partial_fn(fn, x, (1, 2))
@@ -126,11 +202,32 @@ def test_advection_diffusion_consumes_cross_polarization():
     assert float(jnp.max(jnp.abs(r_full - r_nomix))) > 1e-6
 
 
-def test_deriv_table_rejects_undeclared_mixed():
+def test_deriv_table_surface():
     d = DerivTable(jnp.zeros((2, 3, 4)), {(0, 1): jnp.zeros(4)})
+    assert d.n_components == 1                       # rank-3 promotes to one
     np.testing.assert_allclose(d.mixed(1, 0), 0.0)   # order-insensitive
     with pytest.raises(KeyError, match="mixed="):
         d.mixed(0, 0)
+    # component indexing round-trips
+    pure = jnp.arange(2 * 3 * 4 * 2, dtype=jnp.float64).reshape(2, 3, 4, 2)
+    mx = jnp.arange(8, dtype=jnp.float64).reshape(4, 2)
+    dv = DerivTable(pure, {(0, 1): mx})
+    assert dv.n_components == 2
+    np.testing.assert_allclose(dv(1, 2, comp=1), pure[1, 2, :, 1])
+    np.testing.assert_allclose(dv(1, 2), pure[1, 2, :, 0])  # comp defaults 0
+    np.testing.assert_allclose(dv.mixed(0, 1, comp=1), mx[:, 1])
+    # out-of-range lookups raise instead of letting jnp clamp to a wrong
+    # (but plausible-looking) component/axis/order
+    with pytest.raises(IndexError, match="comp=2"):
+        dv(0, 0, comp=2)
+    with pytest.raises(IndexError, match="comp=1"):
+        d(0, 0, comp=1)
+    with pytest.raises(IndexError, match="comp=2"):
+        dv.mixed(0, 1, comp=2)
+    with pytest.raises(IndexError):
+        dv(2, 0)                                 # axis beyond d_in
+    with pytest.raises(IndexError):
+        dv(0, 3)                                 # order beyond the table
 
 
 # ---------------------------------------------------------------------------
@@ -169,12 +266,13 @@ def test_cross_symmetry_of_mixed_partials():
 # generic loss + trainer surface
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", NEW_OPS)
+@pytest.mark.parametrize("name", DIFFABLE_OPS)
 def test_generic_loss_engines_agree(name):
-    op, params, x = _net_and_pts(name, n=16, width=10, depth=2)
+    op, net, params, x = _net_and_pts(name, n=16, width=10, depth=2)
     bc = boundary_grid(op.domain, 6, jnp.float64)
-    bc_vals = op.exact(bc)
-    kw = dict(op=op, pts=x, bc_pts=bc, bc_vals=bc_vals, weights=LossWeights())
+    bc_vals = exact_values(op, bc)
+    kw = dict(op=op, pts=x, bc_pts=bc, bc_vals=bc_vals, net=net,
+              weights=LossWeights())
     l1, aux1 = pinn_loss(params, engine="ntp", **kw)
     l2, aux2 = pinn_loss(params, engine="autodiff", **kw)
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-9)
@@ -186,33 +284,52 @@ def test_generic_loss_engines_agree(name):
 
 @pytest.mark.parametrize("name", ALL_OPS)
 def test_loss_identical_across_all_engine_objects(name):
-    """Acceptance: every registered operator produces the same loss under
-    NTPEngine('jnp'), NTPEngine('pallas'), and AutodiffEngine() through the
-    new object API, and the old engine=/impl= keyword path agrees."""
+    """Every registered operator produces the same loss under NTPEngine('jnp'),
+    NTPEngine('pallas'), and AutodiffEngine() through the object API, and the
+    spec-string path agrees bit-for-bit with the object path."""
     op = get_operator(name)
-    params = init_mlp(jax.random.PRNGKey(2), op.d_in, 10, 2, 1,
+    net = DenseMLP(op.d_in, 10, 2, op.d_out)
+    params = init_mlp(jax.random.PRNGKey(2), op.d_in, 10, 2, op.d_out,
                       dtype=jnp.float32)
     x = sample_box(jax.random.PRNGKey(3), op.domain, 12, jnp.float32)
     bc = boundary_grid(op.domain, 4, jnp.float32)
-    bc_vals = jnp.asarray(np.asarray(op.exact(bc)), jnp.float32)
-    kw = dict(op=op, pts=x, bc_pts=bc, bc_vals=bc_vals, weights=LossWeights())
+    bc_vals = exact_values(op, bc, jnp.float32)
+    kw = dict(op=op, pts=x, bc_pts=bc, bc_vals=bc_vals, net=net,
+              weights=LossWeights())
     l_jnp = float(pinn_loss(params, engine=NTPEngine("jnp"), **kw)[0])
     l_pal = float(pinn_loss(params, engine=NTPEngine("pallas"), **kw)[0])
     l_ad = float(pinn_loss(params, engine=AutodiffEngine(), **kw)[0])
-    l_old = float(pinn_loss(params, engine="ntp", impl="jnp", **kw)[0])
+    l_spec = float(pinn_loss(params, engine="ntp", **kw)[0])
     np.testing.assert_allclose(l_jnp, l_ad, rtol=2e-4)
-    np.testing.assert_allclose(l_jnp, l_pal, rtol=2e-3)
-    np.testing.assert_allclose(l_jnp, l_old, rtol=0, atol=0)
+    np.testing.assert_allclose(l_jnp, l_pal, rtol=2e-2)
+    np.testing.assert_allclose(l_jnp, l_spec, rtol=0, atol=0)
 
 
 def test_generic_loss_is_jit_and_grad_compatible():
-    op, params, x = _net_and_pts("heat", n=8, width=8, depth=2)
+    op, net, params, x = _net_and_pts("heat", n=8, width=8, depth=2)
     bc = boundary_grid(op.domain, 4, jnp.float64)
-    bc_vals = op.exact(bc)
+    bc_vals = exact_values(op, bc)
 
     @jax.jit
     def loss(p):
-        return pinn_loss(p, op=op, pts=x, bc_pts=bc, bc_vals=bc_vals)[0]
+        return pinn_loss(p, op=op, pts=x, bc_pts=bc, bc_vals=bc_vals,
+                         net=net)[0]
+
+    g = jax.grad(loss)(params)
+    assert all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree_util.tree_leaves(g))
+
+
+def test_system_loss_is_jit_and_grad_compatible():
+    """The d_out=2 objective differentiates cleanly end to end."""
+    op, net, params, x = _net_and_pts("gray-scott", n=8, width=8, depth=2)
+    bc = boundary_grid(op.domain, 4, jnp.float64)
+    bc_vals = exact_values(op, bc)
+
+    @jax.jit
+    def loss(p):
+        return pinn_loss(p, op=op, pts=x, bc_pts=bc, bc_vals=bc_vals,
+                         net=net)[0]
 
     g = jax.grad(loss)(params)
     assert all(bool(jnp.all(jnp.isfinite(leaf)))
@@ -251,6 +368,21 @@ def test_train_operator_smoke():
     assert len(res.loss_history) >= 2
 
 
+@pytest.mark.parametrize("engine", ("ntp", "ntp/pallas"))
+@pytest.mark.parametrize("name", ("gray-scott", "navier-stokes"))
+def test_new_systems_train_end_to_end(name, engine):
+    """Acceptance: both new systems train end to end under ntp/jnp AND
+    ntp/pallas -- the d_out=2 network and the 4th-order streamfunction
+    operator run the full pinn_loss/train_operator path."""
+    cfg = OperatorRunConfig(op=name, engine=engine, width=8, depth=2,
+                            adam_steps=3, n_domain=16, n_bc=4, log_every=1,
+                            eval_pts_per_axis=5)
+    res = train_operator(cfg)
+    assert res.op_name == name
+    assert np.isfinite(res.l2_error)
+    assert all(np.isfinite(v) for v in res.loss_history)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("name", ("poisson2d", "heat"))
 def test_operator_training_converges(name):
@@ -270,3 +402,14 @@ def test_operator_training_autodiff_engine_converges_too():
                             eval_pts_per_axis=16)
     res = train_operator(cfg)
     assert res.loss_history[-1] < res.loss_history[0] * 1e-1
+
+
+@pytest.mark.slow
+def test_gray_scott_training_converges():
+    """The coupled system actually learns both manufactured fields."""
+    cfg = OperatorRunConfig(op="gray-scott", width=24, depth=3,
+                            adam_steps=1200, adam_lr=3e-3, n_domain=512,
+                            n_bc=48, log_every=200, eval_pts_per_axis=24)
+    res = train_operator(cfg)
+    assert res.loss_history[-1] < res.loss_history[0] * 1e-2
+    assert res.l2_error < 0.15
