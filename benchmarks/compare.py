@@ -15,11 +15,14 @@ timings, but coverage is exact):
   warnings into failures (meant for dedicated perf hardware, not shared CPU
   CI runners).
 
-Regenerate the baseline after intentionally changing the benchmark matrix:
+Regenerate the baseline after intentionally changing the benchmark matrix
+(``--update-baseline`` refuses a run with failed suites or coverage holes,
+so an incomplete matrix can never become the new reference):
 
   PYTHONPATH=src python -m benchmarks.run --only operators --smoke \\
-      --json benchmarks/baseline_smoke.json
-  PYTHONPATH=src python -m benchmarks.compare --current BENCH_operators.json
+      --json BENCH_operators.json
+  PYTHONPATH=src python -m benchmarks.compare --current BENCH_operators.json \\
+      --update-baseline
 """
 
 from __future__ import annotations
@@ -47,14 +50,45 @@ def index(payload: dict) -> dict:
 
 def expected_operator_rows() -> set:
     """Every registered operator under every engine spec the operators suite
-    benchmarks -- both imported from their owning modules, so registering a
-    new PDE (or adding an engine spec to the sweep) without benchmark
-    coverage fails the gate."""
+    benchmarks, plus every network-axis architecture on the representative
+    operator -- all imported from their owning modules, so registering a new
+    PDE, adding an engine spec, or adding a trunk to the network axis
+    without benchmark coverage fails the gate."""
     from repro.pinn.operators import operator_names
 
-    from .operators_bench import SPECS, spec_tag
-    return {("operators", f"residual_{op}_{spec_tag(spec)}")
+    from .operators_bench import NETWORK_AXIS, NETWORK_AXIS_OP, SPECS, row_name
+    rows = {("operators", row_name(op, spec))
             for op in operator_names() for spec in SPECS}
+    rows |= {("operators", row_name(NETWORK_AXIS_OP, spec, net))
+             for net in NETWORK_AXIS for spec in SPECS}
+    return rows
+
+
+def update_baseline(args, cur: dict) -> None:
+    """Promote a fresh, complete ``--json`` run to the checked-in baseline."""
+    if cur.get("failed_suites"):
+        raise SystemExit(f"refusing to update baseline: suites raised during "
+                         f"the run: {sorted(cur['failed_suites'])}")
+    try:
+        old_mode = load(args.baseline).get("mode")
+    except (OSError, SystemExit):
+        old_mode = None                  # no existing baseline to match
+    if old_mode is not None and cur.get("mode") != old_mode:
+        raise SystemExit(
+            f"refusing to update baseline: existing {args.baseline} is a "
+            f"{old_mode!r} run but --current is {cur.get('mode')!r}; shapes "
+            f"(and therefore timings) are not comparable -- rerun with "
+            f"matching flags or point --baseline at a new file")
+    missing = sorted(expected_operator_rows() - set(index(cur)))
+    if missing:
+        raise SystemExit("refusing to update baseline: registered rows "
+                         "missing from the run:\n  " +
+                         "\n  ".join(f"{s}/{n}" for s, n in missing))
+    with open(args.baseline, "w") as fh:
+        json.dump(cur, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"baseline updated: {args.baseline} <- {args.current} "
+          f"({len(cur['results'])} rows, mode={cur.get('mode')!r})")
 
 
 def main() -> None:
@@ -69,7 +103,14 @@ def main() -> None:
     ap.add_argument("--strict-timing", action="store_true",
                     help="timing regressions fail instead of warn (for "
                          "dedicated perf hardware)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write --current over --baseline (after checking "
+                         "the run is complete) instead of diffing")
     args = ap.parse_args()
+
+    if args.update_baseline:
+        update_baseline(args, load(args.current))
+        return
 
     base, cur = load(args.baseline), load(args.current)
     if cur["schema_version"] != base["schema_version"]:

@@ -12,6 +12,13 @@ random-feature embedding at zero extra benchmark code.  Vector-valued
 systems ride the same sweep: the network is built with ``d_out=op.d_out``,
 so ``gray-scott`` times the shared-table two-component residual and
 ``navier-stokes`` the 4th-order polarization crosses.
+
+``network_axis`` adds a second sweep -- each named architecture (residual
+and the attention/transformer trunk by default, :data:`NETWORK_AXIS`) timed
+on one representative operator under every engine spec, rows suffixed
+``_net-*``.  The smoke run carries it, and ``compare.py`` derives coverage
+expectations from the same tuples, so a trunk whose jet path rots fails CI
+the way a dropped operator does.
 """
 
 from __future__ import annotations
@@ -35,15 +42,49 @@ DEFAULT_OPS = ("burgers", "heat", "wave", "allen-cahn", "kdv", "poisson2d",
 # this same tuple, so adding a spec here automatically widens the CI gate
 SPECS = ("ntp", "ntp/pallas", "autodiff")
 
+# the network axis: non-default architectures benchmarked (and coverage-
+# gated, same mechanism as SPECS) on one representative operator per spec --
+# the smoke run carries them so a trunk that stops jet-tracing fails the PR
+NETWORK_AXIS = ("residual", "transformer")
+NETWORK_AXIS_OP = "heat"
+
 
 def spec_tag(spec: str) -> str:
     """Engine spec -> the row-name tag used in benchmark output."""
     return spec.replace("/", "_")
 
 
+def row_name(op_name: str, spec: str, network: str = "dense") -> str:
+    """Benchmark row name; non-default networks get a ``_net-`` suffix so
+    the historical dense row names stay stable."""
+    base = f"residual_{op_name}_{spec_tag(spec)}"
+    return base if network == "dense" else f"{base}_net-{network}"
+
+
+def _time_case(op, spec: str, network: str, n_pts: int, width: int,
+               depth: int, trials: int) -> tuple:
+    net = make_network(network, d_in=op.d_in, d_out=op.d_out, width=width,
+                       depth=depth)
+    engine = DerivativeEngine.from_spec(spec)
+    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
+    x = sample_box(jax.random.PRNGKey(1), op.domain, n_pts, jnp.float64)
+
+    fn = jax.jit(functools.partial(
+        lambda p, pts, _op, _eng, _net: residual_values(
+            p, _op, pts, engine=_eng, net=_net),
+        _op=op, _eng=engine, _net=net))
+    t = time_fn(fn, params, x, trials=trials)
+    derived = f"order={op.order};d_in={op.d_in};d_out={op.d_out};" \
+              f"net={network}"
+    return t, derived
+
+
 def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
         operators=DEFAULT_OPS, include_pallas: bool = True,
-        network: str = "dense"):
+        network: str = "dense", network_axis=()):
+    """Main sweep: every operator x engine spec on ``network``.  When
+    ``network_axis`` names extra architectures, each is additionally timed
+    on :data:`NETWORK_AXIS_OP` under every spec (rows suffixed ``_net-*``)."""
     # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
     # and would change the precision (and timings) of every suite after this
     # one.  Timing is dtype-uniform with the other suites instead.
@@ -53,25 +94,20 @@ def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
     ntp_times = {}
     for case in axis_product(op=operators, spec=specs):
         op = get_operator(case["op"])
-        net = make_network(network, d_in=op.d_in, d_out=op.d_out, width=width,
-                           depth=depth)
-        engine = DerivativeEngine.from_spec(case["spec"])
-        params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
-        x = sample_box(jax.random.PRNGKey(1), op.domain, n_pts, jnp.float64)
-
-        fn = jax.jit(functools.partial(
-            lambda p, pts, _op, _eng, _net: residual_values(
-                p, _op, pts, engine=_eng, net=_net),
-            _op=op, _eng=engine, _net=net))
-        t = time_fn(fn, params, x, trials=trials)
-        tag = spec_tag(engine.spec)
-        if engine.spec == "ntp":
+        spec = case["spec"]
+        t, derived = _time_case(op, spec, network, n_pts, width, depth, trials)
+        if spec == "ntp":
             ntp_times[op.name] = t
-        derived = f"order={op.order};d_in={op.d_in};d_out={op.d_out};" \
-                  f"net={network}"
-        if engine.spec == "autodiff" and op.name in ntp_times:
+        if spec == "autodiff" and op.name in ntp_times:
             derived += f";vs_ntp_x={t / ntp_times[op.name]:.2f}"
-        rows.append(csv_row(f"residual_{op.name}_{tag}", t, derived))
+        rows.append(csv_row(row_name(op.name, spec, network), t, derived))
+
+    axis_op = get_operator(NETWORK_AXIS_OP)
+    for case in axis_product(net=tuple(network_axis), spec=specs):
+        t, derived = _time_case(axis_op, case["spec"], case["net"], n_pts,
+                                width, depth, trials)
+        rows.append(csv_row(row_name(axis_op.name, case["spec"], case["net"]),
+                            t, derived))
     return rows
 
 

@@ -65,10 +65,15 @@ def main() -> None:
             "smoke": dict(max_order=4), "fast": dict(max_order=6),
             "full": dict(max_order=6)}),
         "operators": (operators_bench.run, {
+            # smoke carries the network axis (residual + transformer on the
+            # representative op) so every registered trunk stays coverage-
+            # gated per commit, like every operator x engine pair
             "smoke": dict(n_pts=16, width=8, depth=2, trials=1,
-                          include_pallas=True),
+                          include_pallas=True,
+                          network_axis=operators_bench.NETWORK_AXIS),
             "fast": dict(n_pts=256, trials=2, include_pallas=False),
-            "full": dict(n_pts=1024, trials=5, include_pallas=True)}),
+            "full": dict(n_pts=1024, trials=5, include_pallas=True,
+                         network_axis=operators_bench.NETWORK_AXIS)}),
         "burgers_e2e": (burgers_e2e.run, {
             "smoke": dict(adam_steps=4, lbfgs_steps=2),
             "fast": dict(adam_steps=40, lbfgs_steps=8),

@@ -36,6 +36,9 @@ def main():
     ap.add_argument("--network", default="dense", choices=list(network_names()))
     ap.add_argument("--fourier-features", type=int, default=16,
                     help="embedding size for --network fourier")
+    ap.add_argument("--heads", type=int, default=2,
+                    help="attention heads for --network transformer "
+                         "(--width must be divisible by it)")
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--lbfgs", type=int, default=0)
     ap.add_argument("--width", type=int, default=32)
@@ -54,6 +57,8 @@ def main():
     net_kwargs = {}
     if args.network == "fourier":
         net_kwargs["n_features"] = args.fourier_features
+    elif args.network == "transformer":
+        net_kwargs["n_heads"] = args.heads
     cfg = OperatorRunConfig(op=args.op, engine=args.engine,
                             network=args.network, net_kwargs=net_kwargs,
                             adam_steps=args.steps, lbfgs_steps=args.lbfgs,

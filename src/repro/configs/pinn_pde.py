@@ -1,4 +1,4 @@
-"""PDE-operator PINN architecture: tanh MLP for the multi-PDE scenarios
+"""PDE-operator PINN architecture: the multi-PDE scenario surface
 (heat / wave / KdV / Allen-Cahn / 2-D Poisson / advection-diffusion /
 Navier-Stokes streamfunction / Gray-Scott; mixed partials up to the 4th-order
 psi_xxyy are served by polarization, and Gray-Scott trains one d_out=2
@@ -9,9 +9,13 @@ solutions carry more structure; registered so --arch pinn-pde drives the
 operator workloads through the same launcher surface as pinn-mlp.  The
 training-side knobs live on ``repro.pinn.OperatorRunConfig``: ``engine``
 takes a derivative-engine spec ("ntp", "ntp/pallas", "autodiff") and
-``network`` a registered architecture ("dense", "mlp", "residual",
-"fourier" -- see ``repro.core.network``); d_in follows the operator (2 for
-the (t, x) PDEs, 3 for advection-diffusion's (t, x, y))."""
+``network`` a registered architecture built on the jet-module layer
+("dense", "mlp", "residual", "fourier", "transformer" -- see
+``repro.core.network`` / ``repro.core.modules``); transformer extras ride
+``net_kwargs`` (``{"n_heads": 2, "mlp_ratio": 2}``; the attention trunk
+tokenizes the d_in input coordinates, so n_heads/head_dim below describe the
+default attention shape, not a sequence model).  d_in follows the operator
+(2 for the (t, x) PDEs, 3 for advection-diffusion's (t, x, y))."""
 
 from .base import ArchConfig
 
@@ -19,13 +23,14 @@ CONFIG = ArchConfig(
     name="pinn-pde",
     family="pinn",
     n_layers=3,
-    d_model=32,          # width
-    n_heads=1,
-    n_kv_heads=1,
-    head_dim=1,
-    d_ff=32,
+    d_model=32,          # width (d_model for network="transformer")
+    n_heads=2,           # transformer trunk default (width % n_heads == 0)
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=64,             # transformer feed-forward = mlp_ratio(2) * width
     vocab=2,             # d_in = 2 (t, x) or (x, y); d_out follows op.d_out
     attn_pattern=("global",),
     dtype="float64",
-    source="[operator subsystem default: 3 hidden layers x 32 neurons, tanh]",
+    source="[operator subsystem default: 3 hidden layers x 32 neurons, tanh;"
+           " transformer trunk: 2 heads, mlp_ratio 2 over coordinate tokens]",
 )

@@ -1,23 +1,33 @@
 """Core n-TangentProp: jets, Faa di Bruno tables, activation derivative
-stacks, jet-traceable networks, and the derivative-engine hierarchy."""
+stacks, the compositional jet-module layer, jet-traceable networks, and the
+derivative-engine hierarchy."""
 
-from . import jet
+from . import jet, modules
 from .activations import TAYLOR_STACKS, tanh_taylor_stack
 from .engines import (AutodiffEngine, DerivativeEngine, JaxJetEngine,
                       NTPEngine)
 from .jet import Jet
+from .modules import (Activation, CoordinateEmbedding, Dense, FourierFeatures,
+                      MLPBlock, Module, Residual, RMSNorm, SelfAttention,
+                      Sequential, TokenPool, make_module, module_names,
+                      register_module)
 from .network import (DenseMLP, MLP, FourierFeatureMLP, Network, ResidualMLP,
-                      make_network, network_names, register_network)
+                      Transformer, make_network, network_names,
+                      register_network)
 from .ntp import (MLPParams, cross, init_mlp, mlp_apply, ntp_derivatives,
                   ntp_forward, ntp_grid, ntp_jet, num_params)
 from .partitions import (bell_number, faa_di_bruno_table, partition_count,
                          partitions, raw_bell_coefficient, total_fdb_terms)
 
 __all__ = [
-    "jet", "Jet", "TAYLOR_STACKS", "tanh_taylor_stack",
+    "jet", "Jet", "modules", "TAYLOR_STACKS", "tanh_taylor_stack",
     "AutodiffEngine", "DerivativeEngine", "JaxJetEngine", "NTPEngine",
+    "Activation", "CoordinateEmbedding", "Dense", "FourierFeatures",
+    "MLPBlock", "Module", "Residual", "RMSNorm", "SelfAttention",
+    "Sequential", "TokenPool", "make_module", "module_names",
+    "register_module",
     "DenseMLP", "MLP", "FourierFeatureMLP", "Network", "ResidualMLP",
-    "make_network", "network_names", "register_network",
+    "Transformer", "make_network", "network_names", "register_network",
     "MLPParams", "cross", "init_mlp", "mlp_apply", "ntp_derivatives",
     "ntp_forward", "ntp_grid", "ntp_jet", "num_params",
     "bell_number", "faa_di_bruno_table", "partition_count", "partitions",

@@ -146,11 +146,23 @@ TAYLOR_STACKS: Dict[str, Callable[[jnp.ndarray, int], jnp.ndarray]] = {
     "exp": exp_taylor_stack,
 }
 
-# plain primal evaluation (for order-0 fast paths)
+# tanh-approximation GELU constants, shared with the jet-side composition
+# (repro.core.jet.gelu) so primal and jet can never drift apart
+GELU_TANH_C = math.sqrt(2.0 / math.pi)
+GELU_TANH_CUBIC = 0.044715
+
+# plain primal evaluation (for order-0 fast paths).  The composite names
+# (silu / gelu / relu / identity) have no Taylor table -- their jets go
+# through repro.core.jet.activation's algebraic definitions instead.
 PRIMALS: Dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
     "tanh": jnp.tanh,
     "sigmoid": jax_sigmoid,
     "softplus": lambda a: jnp.logaddexp(a, 0.0),
     "sin": jnp.sin,
     "exp": jnp.exp,
+    "silu": lambda a: a * jax_sigmoid(a),
+    "gelu": lambda a: 0.5 * a * (1.0 + jnp.tanh(
+        GELU_TANH_C * (a + GELU_TANH_CUBIC * a ** 3))),
+    "relu": lambda a: jnp.maximum(a, 0.0),
+    "identity": lambda a: a,
 }

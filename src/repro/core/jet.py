@@ -28,7 +28,7 @@ from typing import Callable, Sequence, Union
 import jax
 import jax.numpy as jnp
 
-from .activations import TAYLOR_STACKS
+from .activations import GELU_TANH_C, GELU_TANH_CUBIC, TAYLOR_STACKS
 from .partitions import faa_di_bruno_table
 
 
@@ -181,11 +181,18 @@ def scale(a: Jet, s) -> Jet:
 
 def linear(a: Jet, w: jnp.ndarray, b: jnp.ndarray | None = None,
            eq: str = "...i,ij->...j") -> Jet:
-    """Dense layer on a jet: W acts on every coefficient, bias only on c_0."""
-    rows = [jnp.einsum(eq, a.coeffs[k], w) for k in range(a.order + 1)]
+    """Dense layer on a jet: W acts on every coefficient, bias only on c_0.
+
+    ``eq`` must open with an ellipsis on the jet operand: the coefficient
+    axis (and any leading batch/token axes) folds into the ``...`` so the
+    whole stack contracts in ONE einsum instead of per-coefficient calls."""
+    if not eq.startswith("..."):
+        raise ValueError(f"linear eq must start with '...' so the "
+                         f"coefficient axis can ride it, got {eq!r}")
+    out = jnp.einsum(eq, a.coeffs, w)
     if b is not None:
-        rows[0] = rows[0] + b
-    return Jet(jnp.stack(rows))
+        out = out.at[0].add(b)
+    return Jet(out)
 
 
 def reduce_sum(a: Jet, axis, keepdims: bool = False) -> Jet:
@@ -344,19 +351,39 @@ def silu(a: Jet) -> Jet:
     return mul(a, sigmoid(a))
 
 
-_GELU_C = math.sqrt(2.0 / math.pi)
-
-
 def gelu(a: Jet) -> Jet:
-    """tanh-approximation GELU as a pure jet composition (poly + tanh + mul)."""
+    """tanh-approximation GELU as a pure jet composition (poly + tanh + mul);
+    constants shared with PRIMALS['gelu'] via core.activations."""
     a3 = mul(mul(a, a), a)
-    inner = scale(add(a, scale(a3, 0.044715)), _GELU_C)
+    inner = scale(add(a, scale(a3, GELU_TANH_CUBIC)), GELU_TANH_C)
     return scale(mul(a, add(tanh(inner), 1.0)), 0.5)
 
 
 def relu(a: Jet) -> Jet:
     """Piecewise-linear: exact wherever a_0 != 0 (jets vanish on the off side)."""
     return where(a.coeffs[0] > 0, a, scale(a, 0.0))
+
+
+def identity(a: Jet) -> Jet:
+    return a
+
+
+_COMPOSITE_ACTS: dict[str, Callable[[Jet], Jet]] = {
+    "silu": silu, "gelu": gelu, "relu": relu, "identity": identity,
+}
+
+
+def activation(a: Jet, name: str) -> Jet:
+    """Named activation on a jet: table-backed names go through the Faa di
+    Bruno contraction (:func:`compose`); composite ones (silu, gelu, relu,
+    identity) through their jet-algebra definitions.  The single dispatch
+    point for :class:`repro.core.modules.Dense`/``Activation`` leaves."""
+    if name in TAYLOR_STACKS:
+        return compose(a, name)
+    if name in _COMPOSITE_ACTS:
+        return _COMPOSITE_ACTS[name](a)
+    raise KeyError(f"unknown activation {name!r}; known: "
+                   f"{sorted(set(TAYLOR_STACKS) | set(_COMPOSITE_ACTS))}")
 
 
 # ---------------------------------------------------------------------------

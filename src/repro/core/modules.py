@@ -1,0 +1,423 @@
+"""Compositional jet-modules: reusable blocks every Network is built from.
+
+PR 2 made the *engines* network-agnostic; this layer makes the *networks*
+module-agnostic.  A :class:`Module` is the smallest jet-traceable unit --
+``init`` / ``apply`` / ``jet_apply`` with exactly the Network contract
+(``repro.core.network``), so a Network is just a Module with ``d_in``/
+``d_out``/``activation`` metadata and combinators compose freely:
+
+* **leaves** own parameters and the jet rules for one operation --
+  :class:`Dense` (with the Pallas ``jet_dense`` fast path and fused
+  activation epilogue), :class:`Activation`, :class:`FourierFeatures`,
+  :class:`RMSNorm`, :class:`SelfAttention`, :class:`MLPBlock`,
+  :class:`CoordinateEmbedding`, :class:`TokenPool`;
+* **combinators** own structure only -- :class:`Sequential` (params are a
+  tuple, one entry per child, keys split once per child in order) and
+  :class:`Residual` (``x + inner(x)``; jet addition is coefficient-wise and
+  exact, so skips cost nothing in derivative accuracy).
+
+``jet_apply`` composes because every leaf pushes the *same* scaled-Taylor
+jet representation (``repro.core.jet``): the stack ``(order+1, *shape)``
+rides through linear maps coefficient-wise, through contractions as Cauchy
+convolutions (attention scores!), and through smooth scalars via Faa di
+Bruno.  ``impl="pallas"`` routes every Dense contraction through the fused
+kernel dispatch (``repro.kernels.ops.jet_dense``, which accepts arbitrary
+leading batch axes -- token axes included -- and fuses the activation
+epilogue when ``ops.supports_epilogue(name)``); everything else runs the
+reference jet algebra, so a module mixes kernel and reference paths freely.
+
+Leaves register themselves in a name -> factory registry
+(:func:`register_module`) so configs and future conversion tools can build
+graphs from data.  New blocks implement the three methods and slot into any
+combinator; see ``repro.core.network.Transformer`` for the first non-MLP
+consumer (pre-norm self-attention trunk over coordinate tokens).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import jet as J
+from .activations import PRIMALS
+from .ntp import xavier_uniform
+
+Params = Any  # parameter pytree; structure owned by the module
+
+
+class Module:
+    """Smallest jet-traceable unit: the Network contract without metadata.
+
+    Stateless modules keep the default ``init`` (empty params) but still
+    consume one RNG key inside :class:`Sequential` so adding parameters to a
+    block never reshuffles its siblings' initializations.
+    """
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return ()
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        raise NotImplementedError
+
+
+def _check_impl(impl: str) -> None:
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown impl {impl!r} (want 'jnp' or 'pallas')")
+
+
+def dense_jet(jet: J.Jet, w: jnp.ndarray, b: jnp.ndarray | None,
+              activation: str | None, impl: str) -> J.Jet:
+    """One dense contraction (+ optional activation) on a jet, dispatched.
+
+    The shared fast path for every module that multiplies a jet by a weight
+    matrix: ``impl="pallas"`` runs the fused kernel (activation folded into
+    the kernel epilogue when the table exists, else the kernel computes the
+    linear part and the activation composes through the jet algebra);
+    ``impl="jnp"`` is the reference algebra.  Arbitrary leading batch axes
+    (collocation batch, token axis) are supported by both paths.
+    """
+    _check_impl(impl)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        if b is None:
+            b = jnp.zeros((w.shape[1],), jet.dtype)
+        if activation is None or kops.supports_epilogue(activation):
+            return J.Jet(kops.jet_dense(jet.coeffs, w, b, activation))
+        out = J.Jet(kops.jet_dense(jet.coeffs, w, b, None))
+        return J.activation(out, activation)
+    out = J.linear(jet, w, b)
+    if activation is not None:
+        out = J.activation(out, activation)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# leaf modules
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Dense(Module):
+    """``act(x @ w + b)`` -- params ``(w, b)``; ``activation=None`` is the
+    linear readout.  The jet path is the Pallas-fused layer of the paper's
+    Algorithm 1."""
+
+    d_in: int
+    d_out: int
+    activation: str | None = None
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return (xavier_uniform(key, self.d_in, self.d_out, dtype),
+                jnp.zeros((self.d_out,), dtype))
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        w, b = params
+        y = x @ w + b
+        return PRIMALS[self.activation](y) if self.activation else y
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        w, b = params
+        return dense_jet(jet, w, b, self.activation, impl)
+
+
+@dataclass(frozen=True)
+class Activation(Module):
+    """Pointwise activation as its own (stateless) block.  Under
+    ``impl="pallas"`` a table-backed activation runs the fused Faa di Bruno
+    kernel (``ops.act_jet``); anything else composes through the algebra."""
+
+    name: str
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return PRIMALS[self.name](x)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        _check_impl(impl)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            if kops.supports_epilogue(self.name):
+                return J.Jet(kops.act_jet(jet.coeffs, self.name))
+        return J.activation(jet, self.name)
+
+
+@dataclass(frozen=True)
+class FourierFeatures(Module):
+    """``gamma(x) = [sin(2pi B x), cos(2pi B x)]`` with fixed Gaussian ``B``
+    (Tancik et al. 2020).  Params are the bare ``B`` array, excluded from
+    gradients via stop_gradient; the jet is exact (``sin`` through Faa di
+    Bruno, ``cos z = sin(z + pi/2)`` reusing the same table)."""
+
+    d_in: int
+    n_features: int
+    scale: float = 1.0
+
+    @property
+    def d_out(self) -> int:
+        return 2 * self.n_features
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return self.scale * jax.random.normal(
+            key, (self.d_in, self.n_features), dtype)
+
+    def _freqs(self, B: jnp.ndarray) -> jnp.ndarray:
+        return 2.0 * math.pi * jax.lax.stop_gradient(B)
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        z = x @ self._freqs(params)
+        return jnp.concatenate([jnp.sin(z), jnp.cos(z)], axis=-1)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        _check_impl(impl)
+        z = J.linear(jet, self._freqs(params))
+        s = J.compose(z, "sin")
+        c = J.compose(J.add(z, 0.5 * math.pi), "sin")  # cos z = sin(z + pi/2)
+        return J.jmap(lambda a, b: jnp.concatenate([a, b], axis=-1), s, c)
+
+
+@dataclass(frozen=True)
+class RMSNorm(Module):
+    """Pre-norm RMS normalization over the trailing feature axis; params are
+    the gain ``gamma`` (ones-init).  Smooth everywhere (rsqrt of a positive
+    mean square), so the jet is exact at every order."""
+
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return jnp.ones((self.dim,), dtype)
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + self.eps) * params
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        _check_impl(impl)
+        return J.rms_norm(jet, params, eps=self.eps)
+
+
+@dataclass(frozen=True)
+class SelfAttention(Module):
+    """Multi-head scaled-dot-product self-attention over the token axis
+    (``x``: (..., T, dim)).  Scores are a jet x jet Cauchy-convolved einsum,
+    softmax goes through the exp/div power-series recurrences, and the value
+    contraction is a second jet x jet einsum -- the whole block stays inside
+    the quasilinear jet algebra (no nested autodiff anywhere).  Projections
+    ride the Pallas dense dispatch under ``impl="pallas"``."""
+
+    dim: int
+    n_heads: int = 2
+
+    def __post_init__(self):
+        if self.dim % self.n_heads:
+            raise ValueError(f"dim={self.dim} not divisible by "
+                             f"n_heads={self.n_heads}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        mk = lambda k: xavier_uniform(k, self.dim, self.dim, dtype)
+        return {"wq": mk(kq), "wk": mk(kk), "wv": mk(kv), "wo": mk(ko)}
+
+    def _split_heads(self, c: jnp.ndarray) -> jnp.ndarray:
+        return c.reshape(c.shape[:-1] + (self.n_heads, self.head_dim))
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        q = self._split_heads(x @ params["wq"])
+        k = self._split_heads(x @ params["wk"])
+        v = self._split_heads(x @ params["wv"])
+        s = jnp.einsum("...qhd,...khd->...hqk", q, k) / math.sqrt(self.head_dim)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("...hqk,...khd->...qhd", p, v)
+        return o.reshape(o.shape[:-2] + (self.dim,)) @ params["wo"]
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        split = lambda j: J.jmap(self._split_heads, j)
+        q = split(dense_jet(jet, params["wq"], None, None, impl))
+        k = split(dense_jet(jet, params["wk"], None, None, impl))
+        v = split(dense_jet(jet, params["wv"], None, None, impl))
+        s = J.scale(J.einsum("...qhd,...khd->...hqk", q, k),
+                    1.0 / math.sqrt(self.head_dim))
+        p = J.softmax(s, axis=-1)
+        o = J.einsum("...hqk,...khd->...qhd", p, v)
+        o = J.jmap(lambda c: c.reshape(c.shape[:-2] + (self.dim,)), o)
+        return dense_jet(o, params["wo"], None, None, impl)
+
+
+@dataclass(frozen=True)
+class MLPBlock(Module):
+    """Transformer feed-forward: ``Dense(dim, hidden, act) -> Dense(hidden,
+    dim)``; params are the inner :class:`Sequential`'s tuple."""
+
+    dim: int
+    hidden: int
+    activation: str = "tanh"
+
+    def _seq(self) -> "Sequential":
+        return Sequential((Dense(self.dim, self.hidden, self.activation),
+                           Dense(self.hidden, self.dim, None)))
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return self._seq().init(key, dtype)
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return self._seq().apply(params, x, unroll=unroll)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        return self._seq().jet_apply(params, jet, impl=impl)
+
+
+@dataclass(frozen=True)
+class CoordinateEmbedding(Module):
+    """Tokens from coordinates: input point ``x`` (..., d_in) becomes d_in
+    tokens, token t = ``x_t * w[t] + b[t]`` (..., d_in, dim).  Each
+    coordinate gets its own embedding row, so ``w``/``b`` double as learned
+    positional encodings; the map is linear, hence jet-exact."""
+
+    d_in: int
+    dim: int
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return (xavier_uniform(key, self.d_in, self.dim, dtype),
+                jnp.zeros((self.d_in, self.dim), dtype))
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        w, b = params
+        return x[..., :, None] * w + b
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        _check_impl(impl)
+        w, b = params
+        coeffs = jet.coeffs[..., :, None] * w
+        return J.Jet(coeffs.at[0].add(b))
+
+
+@dataclass(frozen=True)
+class TokenPool(Module):
+    """Mean over the token axis (..., T, dim) -> (..., dim); linear, so the
+    jet reduces coefficient-wise."""
+
+    axis: int = -2
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return jnp.mean(x, axis=self.axis)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        _check_impl(impl)
+        return J.reduce_mean(jet, axis=self.axis)
+
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Sequential(Module):
+    """Compose modules left to right.  Params are a tuple with one entry per
+    child; ``init`` splits the key once per child *in order*, so a graph's
+    initialization is a pure function of its structure (and a Sequential of
+    Dense leaves reproduces the historical MLP init bit for bit)."""
+
+    modules: Tuple[Module, ...]
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        ks = jax.random.split(key, len(self.modules))
+        return tuple(m.init(k, dtype) for m, k in zip(self.modules, ks))
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        for m, p in zip(self.modules, params):
+            x = m.apply(p, x, unroll=unroll)
+        return x
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        for m, p in zip(self.modules, params):
+            jet = m.jet_apply(p, jet, impl=impl)
+        return jet
+
+
+@dataclass(frozen=True)
+class Residual(Module):
+    """``x + inner(x)``: params are the inner module's.  Jet addition is
+    coefficient-wise, so the skip is exact at every derivative order and
+    costs nothing beyond the inner block."""
+
+    inner: Module
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return self.inner.init(key, dtype)
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return x + self.inner.apply(params, x, unroll=unroll)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        return J.add(jet, self.inner.jet_apply(params, jet, impl=impl))
+
+
+# ---------------------------------------------------------------------------
+# leaf registry: named factories for configs / conversion tools
+# ---------------------------------------------------------------------------
+
+ModuleFactory = Callable[..., Module]
+
+_MODULES: Dict[str, ModuleFactory] = {}
+
+
+def register_module(name: str, factory: ModuleFactory) -> None:
+    if name in _MODULES:
+        raise ValueError(f"module {name!r} already registered")
+    _MODULES[name] = factory
+
+
+def module_names() -> Tuple[str, ...]:
+    return tuple(sorted(_MODULES))
+
+
+def make_module(name: str, **kwargs) -> Module:
+    if name not in _MODULES:
+        raise KeyError(f"unknown module {name!r}; known: {module_names()}")
+    return _MODULES[name](**kwargs)
+
+
+for _name, _factory in (
+    ("dense", Dense),
+    ("activation", Activation),
+    ("fourier_features", FourierFeatures),
+    ("rms_norm", RMSNorm),
+    ("self_attention", SelfAttention),
+    ("mlp_block", MLPBlock),
+    ("coordinate_embedding", CoordinateEmbedding),
+    ("token_pool", TokenPool),
+    ("sequential", Sequential),
+    ("residual", Residual),
+):
+    register_module(_name, _factory)

@@ -17,7 +17,12 @@ first-class abstraction: a :class:`Network` is an object with
   Pallas kernel dispatch (kernels/ops.jet_dense), which falls back to the
   reference automatically for activations without a kernel table.
 
-Shipped networks:
+Every shipped network is a **thin composition over the jet-module layer**
+(:mod:`repro.core.modules`): it declares a module graph (``Sequential`` /
+``Residual`` over registered leaves) and adapts its public parameter pytree
+onto that graph, so no architecture hand-writes jet plumbing -- the leaves
+own the jet rules, the networks own only structure and the (stable) param
+layout.
 
 =================  ==========================================================
 DenseMLP           uniform-width MLP over :class:`repro.core.ntp.MLPParams`
@@ -27,20 +32,21 @@ ResidualMLP        pre-activation skip connections ``h <- h + act(W h + b)``
 FourierFeatureMLP  random-feature embedding ``[sin 2pi Bx, cos 2pi Bx]`` in
                    front of an MLP trunk (the standard PINN spectral-bias
                    fix; B is fixed, not trained)
+Transformer        pre-norm self-attention trunk over coordinate tokens
+                   (the first non-MLP PINN architecture; softmax/einsum/
+                   rms_norm all inside the quasilinear jet algebra)
 =================  ==========================================================
 
-New architectures implement the three-method protocol (or register a factory
-with :func:`register_network`) and every :class:`DerivativeEngine`, the
-operator subsystem, ``pinn_loss``, and ``train_operator`` consume them
-without further plumbing.  ``d_out`` is unconstrained: a d_out > 1 network
-solves a vector-valued PDE system (one shared trunk, one output column per
-unknown field), and the engines carry the component axis through every
-derivative.
+New architectures compose modules the same way (or register a factory with
+:func:`register_network`) and every :class:`DerivativeEngine`, the operator
+subsystem, ``pinn_loss``, and ``train_operator`` consume them without
+further plumbing.  ``d_out`` is unconstrained: a d_out > 1 network solves a
+vector-valued PDE system (one shared trunk, one output column per unknown
+field), and the engines carry the component axis through every derivative.
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Protocol, Tuple, runtime_checkable
 
@@ -48,8 +54,10 @@ import jax
 import jax.numpy as jnp
 
 from . import jet as J
-from .activations import PRIMALS
-from .ntp import MLPParams, init_mlp, mlp_apply, ntp_jet, xavier_uniform
+from .modules import (CoordinateEmbedding, Dense, FourierFeatures, MLPBlock,
+                      Module, Residual, RMSNorm, SelfAttention, Sequential,
+                      TokenPool)
+from .ntp import MLPParams, init_mlp, mlp_apply, xavier_uniform
 
 Params = Any  # parameter pytree; its structure is owned by the network
 
@@ -71,22 +79,31 @@ class Network(Protocol):
                   impl: str = "jnp") -> J.Jet: ...
 
 
-# ---------------------------------------------------------------------------
-# shared building blocks
-# ---------------------------------------------------------------------------
+class _Composed:
+    """Mixin: a network that IS a module graph.
 
-def _dense_jet(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-               activation: str | None, impl: str) -> jnp.ndarray:
-    """One dense layer (+ optional activation) on a raw coefficient stack."""
-    if impl == "pallas":
-        from repro.kernels import ops as kops
-        return kops.jet_dense(coeffs, w, b, activation)
-    if impl != "jnp":
-        raise ValueError(f"unknown impl {impl!r} (want 'jnp' or 'pallas')")
-    out = J.linear(J.Jet(coeffs), w, b)
-    if activation is not None:
-        out = J.compose(out, activation)
-    return out.coeffs
+    Subclasses provide ``_graph()`` (the module composition) and, when the
+    public parameter pytree is not already the graph's tuple layout,
+    ``_graph_params(params)`` to adapt it (a free re-view, never a copy).
+    ``apply``/``jet_apply`` then delegate to the graph, so the network never
+    hand-writes jet plumbing.
+    """
+
+    def _graph(self) -> Module:
+        raise NotImplementedError
+
+    def _graph_params(self, params: Params) -> Params:
+        return params
+
+    def apply(self, params: Params, x: jnp.ndarray, *,
+              unroll: bool = False) -> jnp.ndarray:
+        return self._graph().apply(self._graph_params(params), x,
+                                   unroll=unroll)
+
+    def jet_apply(self, params: Params, jet: J.Jet, *,
+                  impl: str = "jnp") -> J.Jet:
+        return self._graph().jet_apply(self._graph_params(params), jet,
+                                       impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -94,9 +111,10 @@ def _dense_jet(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class DenseMLP:
+class DenseMLP(_Composed):
     """Uniform-width MLP; params are the seed :class:`MLPParams` NamedTuple,
-    so everything that holds an ``MLPParams`` works unchanged."""
+    so everything that holds an ``MLPParams`` works unchanged -- the stacked
+    pytree is adapted onto a Sequential of Dense leaves at call time."""
 
     d_in: int
     width: int
@@ -117,13 +135,23 @@ class DenseMLP:
         return init_mlp(key, self.d_in, self.width, self.depth, self.d_out,
                         dtype=dtype)
 
+    def _graph(self) -> Module:
+        hidden = tuple(Dense(self.width, self.width, self.activation)
+                       for _ in range(self.depth - 1))
+        return Sequential((Dense(self.d_in, self.width, self.activation),
+                           *hidden, Dense(self.width, self.d_out, None)))
+
+    def _graph_params(self, p: MLPParams) -> Params:
+        hidden = tuple((p.w_hidden[i], p.b_hidden[i])
+                       for i in range(p.w_hidden.shape[0]))
+        return ((p.w_in, p.b_in), *hidden, (p.w_out, p.b_out))
+
     def apply(self, params: MLPParams, x: jnp.ndarray, *,
               unroll: bool = False) -> jnp.ndarray:
+        # the stacked pytree admits a lax.scan over hidden layers, keeping
+        # the primal forward's compile time O(1) in depth; unroll=True (for
+        # jax.experimental.jet, which has no scan rule) python-unrolls
         return mlp_apply(params, x, self.activation, unroll=unroll)
-
-    def jet_apply(self, params: MLPParams, jet: J.Jet, *,
-                  impl: str = "jnp") -> J.Jet:
-        return ntp_jet(params, jet, activation=self.activation, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -131,11 +159,12 @@ class DenseMLP:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class MLP:
+class MLP(_Composed):
     """Fully-connected net with arbitrary layer widths.
 
-    ``widths = (d_in, h_1, ..., h_L, d_out)``; params are a tuple of (w, b)
-    pairs, one per layer.  Hidden layers are activated, the last is linear.
+    ``widths = (d_in, h_1, ..., h_L, d_out)``; params ARE the module
+    graph's: a tuple of (w, b) pairs, one per Dense leaf.  Hidden layers are
+    activated, the last is linear.
     """
 
     widths: Tuple[int, ...]
@@ -153,27 +182,15 @@ class MLP:
     def d_out(self) -> int:
         return self.widths[-1]
 
+    def _graph(self) -> Module:
+        last = len(self.widths) - 2
+        return Sequential(tuple(
+            Dense(fi, fo, self.activation if i < last else None)
+            for i, (fi, fo) in enumerate(zip(self.widths[:-1],
+                                             self.widths[1:]))))
+
     def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
-        ks = jax.random.split(key, len(self.widths) - 1)
-        return tuple((xavier_uniform(k, fi, fo, dtype), jnp.zeros((fo,), dtype))
-                     for k, fi, fo in zip(ks, self.widths[:-1], self.widths[1:]))
-
-    def apply(self, params: Params, x: jnp.ndarray, *,
-              unroll: bool = False) -> jnp.ndarray:
-        act = PRIMALS[self.activation]
-        h = x
-        for w, b in params[:-1]:
-            h = act(h @ w + b)
-        w, b = params[-1]
-        return h @ w + b
-
-    def jet_apply(self, params: Params, jet: J.Jet, *,
-                  impl: str = "jnp") -> J.Jet:
-        coeffs = jet.coeffs
-        for w, b in params[:-1]:
-            coeffs = _dense_jet(coeffs, w, b, self.activation, impl)
-        w, b = params[-1]
-        return J.Jet(_dense_jet(coeffs, w, b, None, impl))
+        return self._graph().init(key, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -181,10 +198,11 @@ class MLP:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class ResidualMLP:
+class ResidualMLP(_Composed):
     """``h_0 = act(W_in x + b_in)``; ``h_j = h_{j-1} + act(W_j h_{j-1} + b_j)``
-    for ``depth`` blocks; linear readout.  Residual adds are coefficient-wise
-    on the jet, so the derivative cost matches the plain MLP layer-for-layer.
+    for ``depth`` blocks; linear readout.  The graph is Dense ->
+    Residual(Dense) x depth -> Dense; residual adds are coefficient-wise on
+    the jet, so the derivative cost matches the plain MLP layer-for-layer.
     """
 
     d_in: int
@@ -205,22 +223,16 @@ class ResidualMLP:
             "b_out": jnp.zeros((self.d_out,), dtype),
         }
 
-    def apply(self, params: Params, x: jnp.ndarray, *,
-              unroll: bool = False) -> jnp.ndarray:
-        act = PRIMALS[self.activation]
-        h = act(x @ params["w_in"] + params["b_in"])
-        for w, b in params["blocks"]:
-            h = h + act(h @ w + b)
-        return h @ params["w_out"] + params["b_out"]
+    def _graph(self) -> Module:
+        blocks = tuple(
+            Residual(Dense(self.width, self.width, self.activation))
+            for _ in range(self.depth))
+        return Sequential((Dense(self.d_in, self.width, self.activation),
+                           *blocks, Dense(self.width, self.d_out, None)))
 
-    def jet_apply(self, params: Params, jet: J.Jet, *,
-                  impl: str = "jnp") -> J.Jet:
-        coeffs = _dense_jet(jet.coeffs, params["w_in"], params["b_in"],
-                            self.activation, impl)
-        for w, b in params["blocks"]:
-            coeffs = coeffs + _dense_jet(coeffs, w, b, self.activation, impl)
-        return J.Jet(_dense_jet(coeffs, params["w_out"], params["b_out"],
-                                None, impl))
+    def _graph_params(self, p: Params) -> Params:
+        return ((p["w_in"], p["b_in"]), *p["blocks"],
+                (p["w_out"], p["b_out"]))
 
 
 # ---------------------------------------------------------------------------
@@ -228,13 +240,12 @@ class ResidualMLP:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class FourierFeatureMLP:
+class FourierFeatureMLP(_Composed):
     """``gamma(x) = [sin(2pi B x), cos(2pi B x)]`` with fixed Gaussian
     ``B ~ N(0, scale^2)`` of shape (d_in, n_features), then an MLP trunk on
     the 2*n_features embedding (Tancik et al. 2020; the standard PINN cure
-    for spectral bias).  B is excluded from gradients (stop_gradient), and
-    the embedding jet is exact: ``sin`` composes through Faa di Bruno and
-    ``cos z = sin(z + pi/2)`` reuses the same table.
+    for spectral bias).  The graph is FourierFeatures -> Dense stack; B is
+    excluded from gradients (stop_gradient) and the embedding jet is exact.
     """
 
     d_in: int
@@ -252,26 +263,70 @@ class FourierFeatureMLP:
 
     def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
         kb, km = jax.random.split(key)
-        B = self.feature_scale * jax.random.normal(
-            kb, (self.d_in, self.n_features), dtype)
+        B = FourierFeatures(self.d_in, self.n_features,
+                            self.feature_scale).init(kb, dtype)
         return {"B": B, "mlp": self._trunk().init(km, dtype)}
 
-    def _freqs(self, params: Params) -> jnp.ndarray:
-        return 2.0 * math.pi * jax.lax.stop_gradient(params["B"])
+    def _graph(self) -> Module:
+        embed = FourierFeatures(self.d_in, self.n_features,
+                                self.feature_scale)
+        return Sequential((embed, *self._trunk()._graph().modules))
 
-    def apply(self, params: Params, x: jnp.ndarray, *,
-              unroll: bool = False) -> jnp.ndarray:
-        z = x @ self._freqs(params)
-        feats = jnp.concatenate([jnp.sin(z), jnp.cos(z)], axis=-1)
-        return self._trunk().apply(params["mlp"], feats, unroll=unroll)
+    def _graph_params(self, p: Params) -> Params:
+        return (p["B"], *p["mlp"])
 
-    def jet_apply(self, params: Params, jet: J.Jet, *,
-                  impl: str = "jnp") -> J.Jet:
-        z = J.linear(jet, self._freqs(params))
-        s = J.compose(z, "sin")
-        c = J.compose(J.add(z, 0.5 * math.pi), "sin")   # cos z = sin(z + pi/2)
-        feats = J.jmap(lambda a, b: jnp.concatenate([a, b], axis=-1), s, c)
-        return self._trunk().jet_apply(params["mlp"], feats, impl=impl)
+
+# ---------------------------------------------------------------------------
+# Transformer: pre-norm self-attention trunk over coordinate tokens
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Transformer(_Composed):
+    """Attention PINN trunk: each input coordinate becomes a token
+    (:class:`CoordinateEmbedding`, whose per-coordinate rows double as
+    learned positional encodings), ``depth`` pre-norm blocks of
+    ``Residual(RMSNorm -> SelfAttention)`` then ``Residual(RMSNorm ->
+    MLPBlock)`` mix the tokens, and a final RMSNorm -> mean token pool ->
+    linear head reads out ``d_out`` components.
+
+    Everything is smooth and jet-traceable: attention scores and value
+    mixing are jet x jet Cauchy-convolved einsums, softmax runs on the
+    exp/div power-series recurrences, RMSNorm on the rsqrt recurrence -- so
+    the whole trunk keeps the paper's O(n p(n) M) derivative cost, versus
+    O(M^n) for nested autodiff through attention.  Params are the module
+    graph's native tuple (this is the first network with no legacy pytree
+    to preserve).
+    """
+
+    d_in: int
+    width: int               # token embedding dim (d_model)
+    depth: int               # number of attention + MLP block pairs
+    d_out: int
+    n_heads: int = 2
+    mlp_ratio: int = 2       # feed-forward hidden dim = mlp_ratio * width
+    activation: str = "tanh"
+
+    def __post_init__(self):
+        if self.width % self.n_heads:
+            raise ValueError(f"width={self.width} not divisible by "
+                             f"n_heads={self.n_heads}")
+
+    def _graph(self) -> Module:
+        mods = [CoordinateEmbedding(self.d_in, self.width)]
+        for _ in range(self.depth):
+            mods.append(Residual(Sequential((
+                RMSNorm(self.width),
+                SelfAttention(self.width, self.n_heads)))))
+            mods.append(Residual(Sequential((
+                RMSNorm(self.width),
+                MLPBlock(self.width, self.mlp_ratio * self.width,
+                         self.activation)))))
+        mods += [RMSNorm(self.width), TokenPool(),
+                 Dense(self.width, self.d_out, None)]
+        return Sequential(tuple(mods))
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        return self._graph().init(key, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -308,3 +363,4 @@ register_network("mlp", lambda *, d_in, d_out, width, depth, activation="tanh",
                  **kw: MLP((d_in,) + (width,) * depth + (d_out,), activation))
 register_network("residual", ResidualMLP)
 register_network("fourier", FourierFeatureMLP)
+register_network("transformer", Transformer)

@@ -5,6 +5,18 @@ On a real TPU these run compiled; on CPU (this container) they run in
 the allclose test sweeps exercise.  The wrappers also pick TPU-aligned block
 shapes and fall back to the pure-jnp reference for tiny shapes where a kernel
 launch would be pure overhead.
+
+This is also the dispatch surface for the compositional module layer
+(``repro.core.modules``):
+
+* :func:`jet_dense` / :func:`act_jet` accept **arbitrary leading batch
+  axes** -- ``(n+1, *batch, D)`` -- and fold them into the kernel's batch
+  dimension, so a transformer block's token axis rides the same fused
+  kernel as a flat collocation batch (reshape is free: it never copies and
+  is transparent to autodiff);
+* :func:`supports_epilogue` tells a module whether an activation can fuse
+  into the dense kernel's Faa di Bruno epilogue (one VMEM round-trip) or
+  must compose through the reference jet algebra after the linear part.
 """
 
 from __future__ import annotations
@@ -24,6 +36,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def supports_epilogue(activation: str) -> bool:
+    """True when the fused dense kernel can run ``activation`` in its
+    epilogue (closed-form Taylor table baked into the kernel body)."""
+    return activation in _KERNEL_ACTS
+
+
+def _fold_batch(coeffs: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
+    """(n+1, *batch, D) -> ((n+1, prod(batch), D), batch) for the 3-D
+    kernels; the inverse is a plain reshape of the kernel output."""
+    batch = coeffs.shape[1:-1]
+    n1, d = coeffs.shape[0], coeffs.shape[-1]
+    flat = 1
+    for s in batch:
+        flat *= s
+    return coeffs.reshape(n1, flat, d), batch
+
+
 # ---------------------------------------------------------------------------
 # custom VJPs: forward runs the fused Pallas kernel; backward *recomputes*
 # through the pure-jnp reference.  This is deliberate, not a workaround:
@@ -32,6 +61,8 @@ def _on_tpu() -> bool:
 #    of every intermediate partition product;
 #  - the recompute is one extra fused-layer-equivalent of FLOPs, the same
 #    trade remat makes for ordinary transformer layers on TPU.
+# The custom_vjp cores are 3-D ((n+1, B, D)); the public wrappers fold any
+# extra leading batch axes around them.
 # ---------------------------------------------------------------------------
 
 def _act_jet_impl(coeffs: jnp.ndarray, activation: str) -> jnp.ndarray:
@@ -41,8 +72,7 @@ def _act_jet_impl(coeffs: jnp.ndarray, activation: str) -> jnp.ndarray:
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def act_jet(coeffs: jnp.ndarray, activation: str = "tanh") -> jnp.ndarray:
-    """Activation jet (n+1, B, W) -> (n+1, B, W)."""
+def _act_jet3(coeffs: jnp.ndarray, activation: str = "tanh") -> jnp.ndarray:
     return _act_jet_impl(coeffs, activation)
 
 
@@ -55,7 +85,14 @@ def _act_jet_bwd(activation, coeffs, g):
     return vjp(g)
 
 
-act_jet.defvjp(_act_jet_fwd, _act_jet_bwd)
+_act_jet3.defvjp(_act_jet_fwd, _act_jet_bwd)
+
+
+def act_jet(coeffs: jnp.ndarray, activation: str = "tanh") -> jnp.ndarray:
+    """Activation jet (n+1, *batch, W) -> same shape."""
+    flat, batch = _fold_batch(coeffs)
+    out = _act_jet3(flat, activation)
+    return out.reshape(out.shape[:1] + batch + out.shape[-1:])
 
 
 def _jet_dense_impl(coeffs, w, b, activation):
@@ -65,9 +102,8 @@ def _jet_dense_impl(coeffs, w, b, activation):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def jet_dense(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-              activation: str | None = "tanh") -> jnp.ndarray:
-    """Fused dense layer + activation jet: (n+1, B, Din) -> (n+1, B, Dout)."""
+def _jet_dense3(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                activation: str | None = "tanh") -> jnp.ndarray:
     return _jet_dense_impl(coeffs, w, b, activation)
 
 
@@ -82,4 +118,14 @@ def _jet_dense_bwd(activation, res, g):
     return vjp(g)
 
 
-jet_dense.defvjp(_jet_dense_fwd, _jet_dense_bwd)
+_jet_dense3.defvjp(_jet_dense_fwd, _jet_dense_bwd)
+
+
+def jet_dense(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              activation: str | None = "tanh") -> jnp.ndarray:
+    """Fused dense layer + activation jet: (n+1, *batch, Din) -> (n+1,
+    *batch, Dout).  Extra leading batch axes (e.g. a token axis) fold into
+    the kernel's GEMM M-dimension and unfold on the way out."""
+    flat, batch = _fold_batch(coeffs)
+    out = _jet_dense3(flat, w, b, activation)
+    return out.reshape(out.shape[:1] + batch + out.shape[-1:])

@@ -158,10 +158,13 @@ class OperatorRunConfig:
 
     ``engine`` accepts a spec string ("ntp", "ntp/pallas", "autodiff") or a
     :class:`DerivativeEngine` instance.  ``network`` names a registered
-    architecture ("dense", "mlp", "residual", "fourier"); ``net_kwargs``
-    passes architecture extras (e.g. ``{"n_features": 32}`` for fourier).
-    The network's output rank follows the operator (``op.d_out``), so
-    multi-equation systems like "gray-scott" train with no extra plumbing.
+    architecture ("dense", "mlp", "residual", "fourier", "transformer" --
+    any composition over the jet-module layer, see ``repro.core.modules``);
+    ``net_kwargs`` passes architecture extras (e.g. ``{"n_features": 32}``
+    for fourier, ``{"n_heads": 4, "mlp_ratio": 2}`` for transformer, whose
+    ``width`` must be divisible by ``n_heads``).  The network's output rank
+    follows the operator (``op.d_out``), so multi-equation systems like
+    "gray-scott" train with no extra plumbing.
     """
 
     op: str = "heat"

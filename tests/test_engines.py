@@ -13,8 +13,8 @@ from _compat import int_grid
 from repro.core import jet as J
 from repro.core import (AutodiffEngine, DenseMLP, DerivativeEngine,
                         FourierFeatureMLP, JaxJetEngine, MLP, MLPParams,
-                        NTPEngine, ResidualMLP, init_mlp, make_network,
-                        network_names)
+                        NTPEngine, ResidualMLP, Transformer, init_mlp,
+                        make_network, network_names)
 from repro.pinn import (OperatorRunConfig, get_operator, pinn_loss,
                         residual_values, train_operator)
 from repro.data.collocation import boundary_grid, sample_box
@@ -24,6 +24,7 @@ NETWORKS = {
     "mlp": MLP((2, 8, 12, 1)),
     "residual": ResidualMLP(2, 10, 2, 1),
     "fourier": FourierFeatureMLP(2, 10, 2, 1, n_features=6),
+    "transformer": Transformer(2, 8, 2, 1, n_heads=2),
 }
 
 
@@ -152,14 +153,21 @@ def test_net_must_match_operator_rank():
 
 
 def test_network_registry():
-    assert {"dense", "mlp", "residual", "fourier"} <= set(network_names())
+    assert {"dense", "mlp", "residual", "fourier",
+            "transformer"} <= set(network_names())
     net = make_network("fourier", d_in=3, d_out=1, width=8, depth=2,
                        n_features=4)
     assert net.d_in == 3 and net.d_out == 1
     with pytest.raises(KeyError):
-        make_network("transformer", d_in=2, d_out=1, width=8, depth=2)
+        make_network("perceiver", d_in=2, d_out=1, width=8, depth=2)
     dense = make_network("dense", d_in=2, d_out=1, width=8, depth=2)
     assert isinstance(dense.init(jax.random.PRNGKey(0)), MLPParams)
+    tr = make_network("transformer", d_in=2, d_out=1, width=8, depth=2,
+                      n_heads=4)
+    assert tr.n_heads == 4 and tr.d_out == 1
+    with pytest.raises(ValueError):     # width must split across heads
+        make_network("transformer", d_in=2, d_out=1, width=9, depth=1,
+                     n_heads=2)
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +229,42 @@ def test_softmax_matches_jax_jet(order, seed):
 
 
 @int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_einsum_matches_jax_jet(order, seed):
+    """Attention leans on jet x jet einsum: the batched score contraction
+    (Cauchy convolution over the coefficient axis) and the degenerate
+    jet x constant case must both match JAX's Taylor mode."""
+    a = _rand_jet(seed, order, shape=(2, 3, 4))
+    b = _rand_jet(seed + 1, order, shape=(2, 3, 4))
+    eq = "bqd,bkd->bqk"
+    _check(J.einsum(eq, a, b), lambda x, y: jnp.einsum(eq, x, y), a, b)
+    # ellipsis batch form (what SelfAttention emits, with a head axis)
+    ah = _rand_jet(seed + 2, order, shape=(2, 3, 2, 2))
+    bh = _rand_jet(seed + 3, order, shape=(2, 3, 2, 2))
+    eqh = "...qhd,...khd->...hqk"
+    _check(J.einsum(eqh, ah, bh), lambda x, y: jnp.einsum(eqh, x, y), ah, bh)
+    # t-constant operand degenerates to a per-coefficient contraction
+    const = jnp.asarray(jax.random.normal(jax.random.PRNGKey(seed + 4),
+                                          (2, 3, 4), jnp.float64))
+    _check(J.einsum(eq, a, const), lambda x: jnp.einsum(eq, x, const), a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
+def test_where_matches_jax_jet(order, seed):
+    """Masked selection with a t-constant predicate (attention masking, relu):
+    exact per-branch coefficients, including mask broadcast and the
+    jet-vs-scalar promoted form."""
+    a = _rand_jet(seed, order, shape=(3, 4))
+    b = _rand_jet(seed + 1, order, shape=(3, 4))
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (3, 4))
+    _check(J.where(mask, a, b), lambda x, y: jnp.where(mask, x, y), a, b)
+    # mask broadcasts across leading axes
+    row = jax.random.bernoulli(jax.random.PRNGKey(seed + 2), 0.5, (4,))
+    _check(J.where(row, a, b), lambda x, y: jnp.where(row, x, y), a, b)
+    # scalar branch promotes to a constant jet (the attention -inf fill)
+    _check(J.where(mask, a, -30.0), lambda x: jnp.where(mask, x, -30.0), a)
+
+
+@int_grid(("order", 1, 6), ("seed", 0, 10_000), max_examples=10)
 def test_rms_norm_matches_jax_jet(order, seed):
     a = _rand_jet(seed, order, shape=(2, 4))
     gamma = jnp.linspace(0.5, 1.5, 4, dtype=jnp.float64)
@@ -249,3 +293,54 @@ def test_new_networks_train_on_registered_pde(network, net_kwargs):
     assert np.isfinite(res.l2_error)
     assert res.loss_history[-1] < res.loss_history[0]
     assert type(res.net).__name__ in ("ResidualMLP", "FourierFeatureMLP")
+
+
+# ---------------------------------------------------------------------------
+# the transformer trunk: oracle agreement through order 4 + e2e training
+# ---------------------------------------------------------------------------
+
+def test_transformer_matches_autodiff_oracle_to_order_4():
+    """Acceptance: derivs and grid of the attention trunk match the nested
+    autodiff oracle to <= 1e-4 through order 4 (they actually agree to
+    float64 roundoff -- the jet algebra is exact, not approximate)."""
+    net = Transformer(2, 8, 2, 1, n_heads=2)
+    params = net.init(jax.random.PRNGKey(11), dtype=jnp.float64)
+    x = _pts(4, seed=12)
+    a = NTPEngine("jnp").derivs(net, params, x, 4)
+    b = AutodiffEngine().derivs(net, params, x, 4)
+    assert a.shape == (5, 4, 1)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-4)
+    np.testing.assert_allclose(a, JaxJetEngine().derivs(net, params, x, 4),
+                               rtol=1e-6, atol=1e-4)
+    np.testing.assert_allclose(NTPEngine("jnp").grid(net, params, x, 4),
+                               AutodiffEngine().grid(net, params, x, 4),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_transformer_vector_output_and_cross():
+    """d_out > 1 attention trunk: the component axis rides through derivs
+    and the polarization cross, like every MLP-family network."""
+    net = Transformer(2, 8, 1, 2, n_heads=2)
+    params = net.init(jax.random.PRNGKey(13), dtype=jnp.float64)
+    x = _pts(4, seed=14)
+    a = NTPEngine("jnp").derivs(net, params, x, 2)
+    b = AutodiffEngine().derivs(net, params, x, 2)   # jacfwd tower path
+    assert a.shape == (3, 4, 2)
+    np.testing.assert_allclose(a, b, rtol=1e-7, atol=1e-8)
+    np.testing.assert_allclose(NTPEngine("jnp").cross(net, params, x, (0, 1)),
+                               AutodiffEngine().cross(net, params, x, (0, 1)),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("engine", ("ntp", "ntp/pallas"))
+def test_transformer_trains_on_registered_pde(engine):
+    """Acceptance: make_network("transformer", ...) trains end to end on a
+    registered operator under ntp AND ntp/pallas."""
+    cfg = OperatorRunConfig(op="heat", network="transformer",
+                            net_kwargs={"n_heads": 2}, width=8, depth=1,
+                            adam_steps=60, adam_lr=1e-3, n_domain=48, n_bc=8,
+                            log_every=10, eval_pts_per_axis=6, engine=engine)
+    res = train_operator(cfg)
+    assert type(res.net).__name__ == "Transformer"
+    assert np.isfinite(res.l2_error)
+    assert res.loss_history[-1] < res.loss_history[0]

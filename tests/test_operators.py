@@ -163,6 +163,27 @@ def test_gray_scott_exact_values_shape():
     assert exact_values(heat, xh).shape == (5, 1)
 
 
+@pytest.mark.parametrize("spec", ENGINE_SPECS)
+@pytest.mark.parametrize("name", ("heat", "kdv", "gray-scott"))
+def test_transformer_trunk_residuals_match_autodiff(name, spec):
+    """The attention trunk rides the operator subsystem like every MLP:
+    residuals under each engine spec match the nested-autodiff oracle,
+    including the d_out=2 system (shared trunk, one output column per
+    field)."""
+    from repro.core.network import Transformer
+    op = get_operator(name)
+    net = Transformer(op.d_in, 8, 1, op.d_out, n_heads=2)
+    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
+    x = sample_box(jax.random.PRNGKey(1), op.domain, 5, jnp.float64)
+    got = residual_values(params, op, x, net=net,
+                          engine=DerivativeEngine.from_spec(spec))
+    ref = residual_values(params, op, x, net=net, engine="autodiff")
+    tol = dict(rtol=2e-5, atol=2e-6) if spec == "ntp/pallas" \
+        else dict(rtol=1e-7, atol=1e-8)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, **tol)
+
+
 # ---------------------------------------------------------------------------
 # oracle 3: the pallas kernel path
 # ---------------------------------------------------------------------------
