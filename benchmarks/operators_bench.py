@@ -18,7 +18,11 @@ and the attention/transformer trunk by default, :data:`NETWORK_AXIS`) timed
 on one representative operator under every engine spec, rows suffixed
 ``_net-*``.  The smoke run carries it, and ``compare.py`` derives coverage
 expectations from the same tuples, so a trunk whose jet path rots fails CI
-the way a dropped operator does.
+the way a dropped operator does.  The ``transformer x ntp/pallas`` rows
+(smoke and full) exercise the FUSED attention path -- SelfAttention routes
+its score Cauchy product + softmax through ``kernels.ops.
+jet_attention_scores`` and RMSNorm through ``jet_rms_norm`` -- and carry a
+``fused_attn=`` tag in their derived field.
 """
 
 from __future__ import annotations
@@ -76,6 +80,16 @@ def _time_case(op, spec: str, network: str, n_pts: int, width: int,
     t = time_fn(fn, params, x, trials=trials)
     derived = f"order={op.order};d_in={op.d_in};d_out={op.d_out};" \
               f"net={network}"
+    if network == "transformer" and spec.endswith("pallas"):
+        # records whether the fused jet_attention_scores/jet_rms_norm
+        # kernels were REGISTERED for this run (epilogue registry at timing
+        # time).  Registry membership => actual module dispatch is enforced
+        # separately by tests/test_parity.py's kernel-invocation guard, so
+        # together the tag certifies the row timed the fused path.
+        from repro.kernels import ops as kops
+        fused = int(kops.supports_epilogue("attention_scores")
+                    and kops.supports_epilogue("rms_norm"))
+        derived += f";fused_attn={fused}"
     return t, derived
 
 

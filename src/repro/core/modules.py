@@ -23,8 +23,12 @@ convolutions (attention scores!), and through smooth scalars via Faa di
 Bruno.  ``impl="pallas"`` routes every Dense contraction through the fused
 kernel dispatch (``repro.kernels.ops.jet_dense``, which accepts arbitrary
 leading batch axes -- token axes included -- and fuses the activation
-epilogue when ``ops.supports_epilogue(name)``); everything else runs the
-reference jet algebra, so a module mixes kernel and reference paths freely.
+epilogue when ``ops.supports_activation_epilogue(name)``), the
+attention-score chain
+through ``ops.jet_attention_scores`` and rms_norm through
+``ops.jet_rms_norm`` (the ``"attention_scores"`` / ``"rms_norm"`` entries
+of the same epilogue registry); anything unfused runs the reference jet
+algebra, so a module mixes kernel and reference paths freely.
 
 Leaves register themselves in a name -> factory registry
 (:func:`register_module`) so configs and future conversion tools can build
@@ -74,6 +78,13 @@ def _check_impl(impl: str) -> None:
         raise ValueError(f"unknown impl {impl!r} (want 'jnp' or 'pallas')")
 
 
+def _has_epilogue(name: str) -> bool:
+    """Lazy wrapper over ``kernels.ops.supports_epilogue`` (kept lazy so the
+    module layer imports without pulling the Pallas stack in)."""
+    from repro.kernels import ops as kops
+    return kops.supports_epilogue(name)
+
+
 def dense_jet(jet: J.Jet, w: jnp.ndarray, b: jnp.ndarray | None,
               activation: str | None, impl: str) -> J.Jet:
     """One dense contraction (+ optional activation) on a jet, dispatched.
@@ -90,7 +101,10 @@ def dense_jet(jet: J.Jet, w: jnp.ndarray, b: jnp.ndarray | None,
         from repro.kernels import ops as kops
         if b is None:
             b = jnp.zeros((w.shape[1],), jet.dtype)
-        if activation is None or kops.supports_epilogue(activation):
+        # the narrow activation-table query, NOT supports_epilogue: the
+        # fused-op registry names ("rms_norm", "attention_scores") are not
+        # dense epilogues and must take the compose-after-kernel path
+        if activation is None or kops.supports_activation_epilogue(activation):
             return J.Jet(kops.jet_dense(jet.coeffs, w, b, activation))
         out = J.Jet(kops.jet_dense(jet.coeffs, w, b, None))
         return J.activation(out, activation)
@@ -147,7 +161,7 @@ class Activation(Module):
         _check_impl(impl)
         if impl == "pallas":
             from repro.kernels import ops as kops
-            if kops.supports_epilogue(self.name):
+            if kops.supports_activation_epilogue(self.name):
                 return J.Jet(kops.act_jet(jet.coeffs, self.name))
         return J.activation(jet, self.name)
 
@@ -192,7 +206,10 @@ class FourierFeatures(Module):
 class RMSNorm(Module):
     """Pre-norm RMS normalization over the trailing feature axis; params are
     the gain ``gamma`` (ones-init).  Smooth everywhere (rsqrt of a positive
-    mean square), so the jet is exact at every order."""
+    mean square), so the jet is exact at every order.  Under
+    ``impl="pallas"`` the whole chain (mean-square convolution, rsqrt
+    recurrence, gain) runs as the fused ``ops.jet_rms_norm`` kernel -- the
+    ``"rms_norm"`` entry of the epilogue registry."""
 
     dim: int
     eps: float = 1e-6
@@ -208,6 +225,9 @@ class RMSNorm(Module):
     def jet_apply(self, params: Params, jet: J.Jet, *,
                   impl: str = "jnp") -> J.Jet:
         _check_impl(impl)
+        if impl == "pallas" and _has_epilogue("rms_norm"):
+            from repro.kernels import ops as kops
+            return J.Jet(kops.jet_rms_norm(jet.coeffs, params, eps=self.eps))
         return J.rms_norm(jet, params, eps=self.eps)
 
 
@@ -217,8 +237,11 @@ class SelfAttention(Module):
     (``x``: (..., T, dim)).  Scores are a jet x jet Cauchy-convolved einsum,
     softmax goes through the exp/div power-series recurrences, and the value
     contraction is a second jet x jet einsum -- the whole block stays inside
-    the quasilinear jet algebra (no nested autodiff anywhere).  Projections
-    ride the Pallas dense dispatch under ``impl="pallas"``."""
+    the quasilinear jet algebra (no nested autodiff anywhere).  Under
+    ``impl="pallas"`` the projections ride the Pallas dense dispatch and the
+    score product + scale + softmax chain runs as ONE fused launch
+    (``ops.jet_attention_scores``, the ``"attention_scores"`` epilogue-
+    registry entry)."""
 
     dim: int
     n_heads: int = 2
@@ -256,9 +279,17 @@ class SelfAttention(Module):
         q = split(dense_jet(jet, params["wq"], None, None, impl))
         k = split(dense_jet(jet, params["wk"], None, None, impl))
         v = split(dense_jet(jet, params["wv"], None, None, impl))
-        s = J.scale(J.einsum("...qhd,...khd->...hqk", q, k),
-                    1.0 / math.sqrt(self.head_dim))
-        p = J.softmax(s, axis=-1)
+        scale = 1.0 / math.sqrt(self.head_dim)
+        if impl == "pallas" and _has_epilogue("attention_scores"):
+            # fused path: Cauchy-product QK^T + scale + softmax recurrence
+            # in ONE Pallas launch; head axis folds into the kernel batch
+            from repro.kernels import ops as kops
+            qh = jnp.moveaxis(q.coeffs, -2, -3)       # (..., H, Tq, D)
+            kh = jnp.moveaxis(k.coeffs, -2, -3)       # (..., H, Tk, D)
+            p = J.Jet(kops.jet_attention_scores(qh, kh, scale))
+        else:
+            s = J.scale(J.einsum("...qhd,...khd->...hqk", q, k), scale)
+            p = J.softmax(s, axis=-1)
         o = J.einsum("...hqk,...khd->...qhd", p, v)
         o = J.jmap(lambda c: c.reshape(c.shape[:-2] + (self.dim,)), o)
         return dense_jet(o, params["wo"], None, None, impl)

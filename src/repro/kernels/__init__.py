@@ -2,9 +2,12 @@
 
 The paper's compute hot-spot is the per-layer jet propagation (stacked GEMM +
 Faa di Bruno activation contraction); ``jet_dense`` fuses both into one VMEM
-round-trip, ``act_jet`` is the standalone pointwise epilogue.  ``ref.py``
-holds the pure-jnp oracles the test sweeps compare against.
+round-trip, ``act_jet`` is the standalone pointwise epilogue.  The
+transformer trunk adds ``jet_attention_scores`` (Cauchy-product QK^T + scale
++ softmax recurrence, one launch per attention layer) and ``jet_rms_norm``
+(mean-square convolution + rsqrt recurrence + gain).  ``ref.py`` holds the
+pure-jnp oracles the test sweeps compare against.
 """
 
 from . import ops, ref
-from .ops import act_jet, jet_dense
+from .ops import act_jet, jet_attention_scores, jet_dense, jet_rms_norm

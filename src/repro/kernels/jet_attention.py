@@ -1,0 +1,192 @@
+"""Pallas TPU kernels: fused jet attention scores + fused jet RMSNorm.
+
+The transformer trunk's per-layer hot path (``repro.core.modules``) is
+
+    S = (1/sqrt(d)) Q K^T        -- jet x jet Cauchy-convolved contraction
+    P = softmax(S, axis=-1)      -- exp / sum / div power-series recurrences
+
+and, around every block, ``rms_norm`` -- a Cauchy square, an rsqrt
+recurrence, and a final Cauchy product.  Through the reference jet algebra
+each of those steps is its own jnp op over the ``(n+1, ...)`` coefficient
+stack, i.e. O(n^2) separate HBM round-trips per layer.  The two kernels here
+fuse each chain into ONE launch:
+
+``jet_attention_scores_pallas``
+    loads a block of Q-jet and K-jet coefficient stacks into VMEM once, runs
+    every Cauchy term of the score convolution as a batched ``dot_general``
+    on the MXU, then the softmax exp/sum/div recurrences on the VPU with the
+    whole coefficient axis in registers, and writes the probability jet once.
+
+``jet_rms_norm_pallas``
+    fuses the mean-square Cauchy convolution, the rsqrt jet (J.C.P. Miller
+    recurrence for a^-1/2), the normalizing Cauchy product, and the gain in
+    one VPU pass.
+
+Tiling: the folded batch axis (collocation batch x heads for attention,
+batch x tokens for rms_norm) is the only gridded dimension -- the token and
+feature axes of a PINN transformer are tiny (T = d_in coordinates), so each
+block holds them whole, and order k of any recurrence mixes all lower
+orders, so the coefficient axis is never split.  Accumulation follows
+jet_dense.py: MXU contractions run with ``preferred_element_type=float32``
+and the output casts back to the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def attention_scores_jet_body(q: jnp.ndarray, k: jnp.ndarray,
+                              scale: float) -> jnp.ndarray:
+    """The fused epilogue on in-VMEM stacks: (n+1, B, T, D) x 2 -> the
+    softmaxed score jet (n+1, B, Tq, Tk).
+
+    Shared by the Pallas kernel and (via the test sweeps) checked against
+    the independent ``ref.jet_attention_scores_ref`` straight-line oracle.
+    """
+    n1 = q.shape[0]
+    # accumulate in f32 for TPU-realistic dtypes (f32/bf16); float64 inputs
+    # (the interpret-mode oracle tests) keep full precision
+    acc_t = jnp.promote_types(q.dtype, jnp.float32)
+
+    def qk(i: int, j: int) -> jnp.ndarray:
+        # (B, T, D) x (B, T, D) -> (B, Tq, Tk), contracting D, batching B
+        return jax.lax.dot_general(
+            q[i], k[j],
+            dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=acc_t) * scale
+
+    # Cauchy-convolved scores: s_k = scale * sum_{i+j=k} Q_i K_j^T
+    s = []
+    for m in range(n1):
+        acc = qk(0, m)
+        for i in range(1, m + 1):
+            acc = acc + qk(i, m - i)
+        s.append(acc)
+
+    # softmax over the key axis via the exp/sum/div recurrences; the shift
+    # is t-constant so it only enters e_0 and cancels in the division
+    shift = jnp.max(s[0], axis=-1, keepdims=True)
+    e = [jnp.exp(s[0] - shift)]
+    for m in range(1, n1):
+        acc = m * s[m] * e[0]
+        for j in range(1, m):
+            acc = acc + j * s[j] * e[m - j]
+        e.append(acc / m)
+
+    tot = [jnp.sum(em, axis=-1, keepdims=True) for em in e]
+    inv0 = 1.0 / tot[0]
+    p = [e[0] * inv0]
+    for m in range(1, n1):
+        acc = e[m]
+        for j in range(1, m + 1):
+            acc = acc - tot[j] * p[m - j]
+        p.append(acc * inv0)
+    return jnp.stack(p)
+
+
+def _scores_kernel(q_ref, k_ref, o_ref, *, scale):
+    out = attention_scores_jet_body(q_ref[...], k_ref[...], scale)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_b", "interpret"))
+def jet_attention_scores_pallas(q: jnp.ndarray, k: jnp.ndarray, scale: float,
+                                block_b: int = 64,
+                                interpret: bool = True) -> jnp.ndarray:
+    """(n+1, B, T, D) Q/K coefficient stacks -> softmaxed score jet
+    (n+1, B, T, T), one launch.  B is the only gridded axis; padded batch
+    rows are all-zero (uniform softmax) and sliced away on return."""
+    n1, bsz, t, d = q.shape
+    if k.shape != q.shape:
+        raise ValueError(f"q/k shape mismatch: {q.shape} vs {k.shape}")
+    bb = min(block_b, bsz)
+    pb = (-bsz) % bb
+    qp = jnp.pad(q, ((0, 0), (0, pb), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pb), (0, 0), (0, 0)))
+    grid = (qp.shape[1] // bb,)
+    out = pl.pallas_call(
+        functools.partial(_scores_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n1, bb, t, d), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((n1, bb, t, d), lambda i: (0, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n1, bb, t, t), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, qp.shape[1], t, t), q.dtype),
+        interpret=interpret,
+    )(qp, kp)
+    return out[:, :bsz]
+
+
+def rms_norm_jet_body(x: jnp.ndarray, gamma: jnp.ndarray,
+                      eps: float) -> jnp.ndarray:
+    """Fused rms_norm jet on an in-VMEM stack: (n+1, B, W) -> same shape.
+
+    mean-square Cauchy convolution -> rsqrt via the J.C.P. Miller recurrence
+    (r = -1/2) -> normalizing Cauchy product -> gain.  Pure VPU work."""
+    n1 = x.shape[0]
+
+    ms = []
+    for m in range(n1):
+        acc = jnp.mean(x[0] * x[m], axis=-1, keepdims=True)
+        for i in range(1, m + 1):
+            acc = acc + jnp.mean(x[i] * x[m - i], axis=-1, keepdims=True)
+        ms.append(acc)
+    ms[0] = ms[0] + eps
+
+    # Miller recurrence for ms^(-1/2): the r = -1/2 coefficient (r+1)j - m
+    # simplifies to (0.5 j - m), spelled identically in ref.jet_rms_norm_ref
+    inv0 = 1.0 / ms[0]
+    inv = [jax.lax.rsqrt(ms[0])]
+    for m in range(1, n1):
+        acc = (0.5 - m) * ms[1] * inv[m - 1]            # j = 1 term
+        for j in range(2, m + 1):
+            acc = acc + (0.5 * j - m) * ms[j] * inv[m - j]
+        inv.append(acc * inv0 / m)
+
+    out = []
+    for m in range(n1):
+        acc = x[m] * inv[0]
+        for j in range(1, m + 1):
+            acc = acc + x[m - j] * inv[j]
+        out.append(acc * gamma)
+    return jnp.stack(out)
+
+
+def _rms_norm_kernel(x_ref, g_ref, o_ref, *, eps):
+    out = rms_norm_jet_body(x_ref[...], g_ref[...][0], eps)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_b", "interpret"))
+def jet_rms_norm_pallas(coeffs: jnp.ndarray, gamma: jnp.ndarray,
+                        eps: float = 1e-6, block_b: int = 256,
+                        interpret: bool = True) -> jnp.ndarray:
+    """(n+1, B, W) coefficient stack + (W,) gain -> rms_norm jet, one launch.
+    The feature axis W is the reduction axis so each block holds it whole."""
+    n1, bsz, w = coeffs.shape
+    if gamma.shape != (w,):
+        raise ValueError(f"gamma shape {gamma.shape} != ({w},)")
+    bb = min(block_b, bsz)
+    pb = (-bsz) % bb
+    xp = jnp.pad(coeffs, ((0, 0), (0, pb), (0, 0)))
+    # padded rows are all-zero: ms_0 = eps > 0, so the rsqrt recurrence
+    # stays finite and the padding slices away cleanly
+    grid = (xp.shape[1] // bb,)
+    out = pl.pallas_call(
+        functools.partial(_rms_norm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n1, bb, w), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n1, bb, w), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, coeffs.dtype),
+        interpret=interpret,
+    )(xp, gamma.reshape(1, -1))
+    return out[:, :bsz]

@@ -40,13 +40,13 @@ def _kernel(y_ref, w_ref, b_ref, o_ref, acc_ref, *, activation, n_k):
     n1, bb, bk = y.shape
     w = w_ref[...]                       # (bk, bd)
     part = jnp.dot(y.reshape(n1 * bb, bk), w,
-                   preferred_element_type=jnp.float32)
+                   preferred_element_type=acc_ref.dtype)
     acc_ref[...] += part.reshape(n1, bb, -1)
 
     @pl.when(k == n_k - 1)
     def _epilogue():
         z = acc_ref[...]
-        z = z.at[0].add(b_ref[...].astype(jnp.float32)[0])
+        z = z.at[0].add(b_ref[...].astype(acc_ref.dtype)[0])
         if activation is None:
             o_ref[...] = z.astype(o_ref.dtype)
         else:
@@ -89,7 +89,11 @@ def jet_dense_pallas(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((n1, bb, bd), lambda i, j, k: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((n1, y.shape[1], wp.shape[1]), coeffs.dtype),
-        scratch_shapes=[pltpu.VMEM((n1, bb, bd), jnp.float32)],
+        # f32 accumulation for the TPU-realistic dtypes (f32/bf16 in); f64
+        # inputs -- the interpret-mode oracle tests -- accumulate in f64
+        scratch_shapes=[pltpu.VMEM((n1, bb, bd),
+                                   jnp.promote_types(coeffs.dtype,
+                                                     jnp.float32))],
         compiler_params=compiler_params,
         interpret=interpret,
     )(y, wp, bp)

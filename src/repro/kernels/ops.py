@@ -14,9 +14,12 @@ This is also the dispatch surface for the compositional module layer
   dimension, so a transformer block's token axis rides the same fused
   kernel as a flat collocation batch (reshape is free: it never copies and
   is transparent to autodiff);
-* :func:`supports_epilogue` tells a module whether an activation can fuse
-  into the dense kernel's Faa di Bruno epilogue (one VMEM round-trip) or
-  must compose through the reference jet algebra after the linear part.
+* :func:`supports_epilogue` is the fused-op registry query (activations
+  AND the dedicated "rms_norm"/"attention_scores" kernels);
+  :func:`supports_activation_epilogue` is the strictly narrower question a
+  Dense/Activation leaf asks -- can the dense kernel's Faa di Bruno
+  epilogue run this activation, or must it compose through the reference
+  jet algebra after the linear part.
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .jet_attention import jet_attention_scores_pallas, jet_rms_norm_pallas
 from .jet_dense import jet_dense_pallas
 from .tanh_jet import KERNEL_ACTS as _KERNEL_ACTS
 from .tanh_jet import act_jet_pallas
@@ -36,21 +40,42 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def supports_epilogue(activation: str) -> bool:
-    """True when the fused dense kernel can run ``activation`` in its
-    epilogue (closed-form Taylor table baked into the kernel body)."""
+# The fused-op registry: names a module may ask about before routing a jet
+# through a Pallas fast path instead of the reference algebra.  The kernel-
+# table activations fuse into jet_dense's Faa di Bruno epilogue; the
+# normalization/attention entries have dedicated fused kernels
+# (kernels/jet_attention.py) reached via jet_rms_norm / jet_attention_scores.
+_EPILOGUES = frozenset(_KERNEL_ACTS) | {"rms_norm", "attention_scores"}
+
+
+def supports_epilogue(name: str) -> bool:
+    """True when ``name`` (an activation, or a fused jet op such as
+    ``"rms_norm"`` / ``"attention_scores"``) can run inside a Pallas kernel
+    body instead of composing through the reference jet algebra."""
+    return name in _EPILOGUES
+
+
+def supports_activation_epilogue(activation: str) -> bool:
+    """True when the *dense kernel* can run ``activation`` in its Faa di
+    Bruno epilogue (closed-form Taylor table baked into the kernel body).
+    Strictly narrower than :func:`supports_epilogue`: the fused-op names
+    ("rms_norm", "attention_scores") are NOT dense epilogues, and a Dense/
+    Activation leaf asking the broad question would hand jet_dense a name
+    its table stack cannot evaluate."""
     return activation in _KERNEL_ACTS
 
 
-def _fold_batch(coeffs: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
-    """(n+1, *batch, D) -> ((n+1, prod(batch), D), batch) for the 3-D
-    kernels; the inverse is a plain reshape of the kernel output."""
-    batch = coeffs.shape[1:-1]
-    n1, d = coeffs.shape[0], coeffs.shape[-1]
+def _fold_batch(coeffs: jnp.ndarray, keep: int = 1) -> tuple[jnp.ndarray, tuple]:
+    """(n+1, *batch, *trailing) -> ((n+1, prod(batch), *trailing), batch),
+    preserving the last ``keep`` axes -- 1 for the 3-D dense/norm kernels,
+    2 for the 4-D attention core (token + feature pair stays whole).  The
+    inverse is a plain reshape of the kernel output."""
+    batch = coeffs.shape[1:-keep]
     flat = 1
     for s in batch:
         flat *= s
-    return coeffs.reshape(n1, flat, d), batch
+    return coeffs.reshape(coeffs.shape[:1] + (flat,) + coeffs.shape[-keep:]), \
+        batch
 
 
 # ---------------------------------------------------------------------------
@@ -128,4 +153,85 @@ def jet_dense(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     the kernel's GEMM M-dimension and unfold on the way out."""
     flat, batch = _fold_batch(coeffs)
     out = _jet_dense3(flat, w, b, activation)
+    return out.reshape(out.shape[:1] + batch + out.shape[-1:])
+
+
+# ---------------------------------------------------------------------------
+# fused attention scores: Cauchy-product QK^T + scale + softmax recurrence
+# in one launch (kernels/jet_attention.py); backward recomputes through the
+# straight-line reference like every op above
+# ---------------------------------------------------------------------------
+
+def _attention_scores_impl(q, k, scale):
+    return jet_attention_scores_pallas(q, k, scale, interpret=not _on_tpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _attention_scores4(q: jnp.ndarray, k: jnp.ndarray,
+                       scale: float) -> jnp.ndarray:
+    return _attention_scores_impl(q, k, scale)
+
+
+def _attention_scores_fwd(q, k, scale):
+    return _attention_scores_impl(q, k, scale), (q, k)
+
+
+def _attention_scores_bwd(scale, res, g):
+    q, k = res
+    _, vjp = jax.vjp(
+        lambda qq, kk: ref.jet_attention_scores_ref(qq, kk, scale), q, k)
+    return vjp(g)
+
+
+_attention_scores4.defvjp(_attention_scores_fwd, _attention_scores_bwd)
+
+
+def jet_attention_scores(q_coeffs: jnp.ndarray, k_coeffs: jnp.ndarray,
+                         scale: float) -> jnp.ndarray:
+    """Fused attention-score jet: Q/K stacks (n+1, *batch, T, D) -> the
+    softmaxed probability jet (n+1, *batch, Tq, Tk).  Extra leading batch
+    axes (collocation batch, head axis) fold into the kernel's gridded batch
+    dimension and unfold on the way out."""
+    qf, batch = _fold_batch(q_coeffs, keep=2)
+    kf, _ = _fold_batch(k_coeffs, keep=2)
+    out = _attention_scores4(qf, kf, scale)
+    return out.reshape(out.shape[:1] + batch + out.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# fused rms_norm: mean-square convolution + rsqrt recurrence + gain in one
+# launch (the "rms_norm" epilogue-registry entry)
+# ---------------------------------------------------------------------------
+
+def _rms_norm_impl(coeffs, gamma, eps):
+    return jet_rms_norm_pallas(coeffs, gamma, eps, interpret=not _on_tpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_norm3(coeffs: jnp.ndarray, gamma: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    return _rms_norm_impl(coeffs, gamma, eps)
+
+
+def _rms_norm_fwd(coeffs, gamma, eps):
+    return _rms_norm_impl(coeffs, gamma, eps), (coeffs, gamma)
+
+
+def _rms_norm_bwd(eps, res, g):
+    coeffs, gamma = res
+    _, vjp = jax.vjp(lambda c, gg: ref.jet_rms_norm_ref(c, gg, eps),
+                     coeffs, gamma)
+    return vjp(g)
+
+
+_rms_norm3.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def jet_rms_norm(coeffs: jnp.ndarray, gamma: jnp.ndarray,
+                 eps: float = 1e-6) -> jnp.ndarray:
+    """Fused rms_norm jet: (n+1, *batch, W) -> same shape, normalized over
+    the trailing feature axis and scaled by the (W,) gain.  Leading batch
+    axes (token axis included) fold into the kernel batch dimension."""
+    flat, batch = _fold_batch(coeffs)
+    out = _rms_norm3(flat, gamma, eps)
     return out.reshape(out.shape[:1] + batch + out.shape[-1:])

@@ -63,3 +63,45 @@ def jet_dense_ref(coeffs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     if activation is None:
         return z
     return act_jet_ref(z, activation)
+
+
+def jet_attention_scores_ref(q: jnp.ndarray, k: jnp.ndarray,
+                             scale: float) -> jnp.ndarray:
+    """Fused attention-score oracle: (n+1, B, T, D) Q/K coefficient stacks
+    -> the softmaxed score jet (n+1, B, Tq, Tk).
+
+    Straight-line: the Cauchy convolution of the score contraction, then the
+    softmax exp / sum / div power-series recurrences written out directly
+    (no core.jet, no shared kernel body)."""
+    n1 = q.shape[0]
+    s = [scale * sum(jnp.einsum("bqd,bkd->bqk", q[i], k[m - i])
+                     for i in range(m + 1)) for m in range(n1)]
+    shift = jnp.max(s[0], axis=-1, keepdims=True)
+    e = [jnp.exp(s[0] - shift)]
+    for m in range(1, n1):
+        e.append(sum(j * s[j] * e[m - j] for j in range(1, m + 1)) / m)
+    tot = [jnp.sum(em, axis=-1, keepdims=True) for em in e]
+    p = [e[0] / tot[0]]
+    for m in range(1, n1):
+        p.append((e[m] - sum(tot[j] * p[m - j] for j in range(1, m + 1)))
+                 / tot[0])
+    return jnp.stack(p)
+
+
+def jet_rms_norm_ref(coeffs: jnp.ndarray, gamma: jnp.ndarray,
+                     eps: float = 1e-6) -> jnp.ndarray:
+    """Fused rms_norm oracle: (n+1, B, W) stack + (W,) gain -> rms_norm jet.
+
+    Straight-line mean-square convolution, binomial-series rsqrt (Miller
+    recurrence, r = -1/2), normalizing convolution, gain."""
+    n1 = coeffs.shape[0]
+    ms = [sum(jnp.mean(coeffs[i] * coeffs[m - i], axis=-1, keepdims=True)
+              for i in range(m + 1)) for m in range(n1)]
+    ms[0] = ms[0] + eps
+    inv = [1.0 / jnp.sqrt(ms[0])]
+    for m in range(1, n1):
+        inv.append(sum((0.5 * j - m) * ms[j] * inv[m - j]
+                       for j in range(1, m + 1)) / (m * ms[0]))
+    out = [sum(coeffs[m - j] * inv[j] for j in range(m + 1)) * gamma
+           for m in range(n1)]
+    return jnp.stack(out)

@@ -8,3 +8,22 @@ jax.config.update("jax_enable_x64", True)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def trained_operator():
+    """Session-cached ``train_operator``: training smoke tests that exercise
+    the same ``OperatorRunConfig`` share ONE run instead of retraining per
+    test (configs are dataclasses, so their auto-repr is a stable cache
+    key).  Keeps tier-1 wall clock down without losing any assertion -- each
+    test still checks its own properties of the shared result."""
+    cache = {}
+
+    def run(cfg):
+        from repro.pinn import train_operator
+        key = repr(cfg)
+        if key not in cache:
+            cache[key] = train_operator(cfg)
+        return cache[key]
+
+    return run

@@ -138,6 +138,45 @@ def test_rms_and_layer_norm_jets():
             np.testing.assert_allclose(out[k], refs[k], rtol=1e-6, atol=1e-9)
 
 
+def test_where_scalar_promotion_regression():
+    """Dedicated lock on J.where's scalar-promotion edge (previously only
+    exercised through relu / the attention -inf fill inside operator
+    sweeps): a non-Jet branch promotes to a constant jet -- value on c_0,
+    zeros above -- regardless of side, Python numeric type, or rank."""
+    coeffs = jax.random.normal(jax.random.PRNGKey(3), (4, 3, 2), jnp.float64)
+    a = J.Jet(coeffs)
+    mask = jnp.asarray([[True, False], [False, True], [True, True]])
+
+    out = J.where(mask, a, -30.0)                  # jet, scalar
+    np.testing.assert_allclose(out.coeffs[0], jnp.where(mask, coeffs[0], -30.0))
+    for k in range(1, 4):                          # constant branch: zeros
+        np.testing.assert_allclose(out.coeffs[k], jnp.where(mask, coeffs[k], 0.0))
+
+    flipped = J.where(mask, -30.0, a)              # scalar, jet
+    np.testing.assert_allclose(flipped.coeffs[0],
+                               jnp.where(mask, -30.0, coeffs[0]))
+    np.testing.assert_allclose(flipped.coeffs[2],
+                               jnp.where(mask, 0.0, coeffs[2]))
+
+    as_int = J.where(mask, a, 2)                   # Python int follows jet dtype
+    assert as_int.dtype == a.dtype
+    np.testing.assert_allclose(as_int.coeffs[0], jnp.where(mask, coeffs[0], 2.0))
+
+    # 0-d array and broadcasting row-array branches promote the same way
+    np.testing.assert_allclose(
+        J.where(mask, a, jnp.asarray(1.5)).coeffs[0],
+        jnp.where(mask, coeffs[0], 1.5))
+    row = jnp.asarray([1.0, 2.0])
+    np.testing.assert_allclose(J.where(mask, a, row).coeffs[0],
+                               jnp.where(mask, coeffs[0], row))
+
+    # order-0 jets keep their (single-coefficient) stack
+    assert J.where(mask, J.Jet(coeffs[:1]), -1.0).coeffs.shape == (1, 3, 2)
+
+    with pytest.raises(TypeError, match="Jet"):    # no jet operand at all
+        J.where(mask, 1.0, 2.0)
+
+
 @int_grid(("order", 0, 6), max_examples=7)
 def test_derivative_roundtrip(order):
     j = seeded(X0, V, order)

@@ -1,5 +1,7 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,8 @@ import pytest
 from repro.core import jet as J
 from repro.kernels import ops, ref
 from repro.kernels.bell_tables import fdb_terms, tanh_poly_rows
+from repro.kernels.jet_attention import (jet_attention_scores_pallas,
+                                         jet_rms_norm_pallas)
 from repro.kernels.jet_dense import jet_dense_pallas
 from repro.kernels.tanh_jet import act_jet_pallas
 
@@ -92,6 +96,126 @@ def test_sin_kernel_path():
     got = jet_dense_pallas(c, w, b, "sin", interpret=True)
     want = ref.jet_dense_ref(c, w, b, "sin")
     np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused attention-score + rms_norm kernels (kernels/jet_attention.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 6])
+@pytest.mark.parametrize("dims", [(5, 3, 4), (19, 2, 8), (3, 1, 1)])
+def test_jet_attention_scores_sweep(order, dims):
+    """Pallas (interpret) vs the straight-line ref, across batch sizes that
+    do and do not divide the block, plus the degenerate single-token /
+    d_head=1 shape."""
+    b, t, d = dims
+    key = jax.random.PRNGKey(order)
+    q = jax.random.normal(key, (order + 1, b, t, d), jnp.float32) * 0.6
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (order + 1, b, t, d), jnp.float32) * 0.6
+    scale = 1.0 / math.sqrt(d)
+    got = jet_attention_scores_pallas(q, k, scale, block_b=8, interpret=True)
+    want = ref.jet_attention_scores_ref(q, k, scale)
+    np.testing.assert_allclose(got, want, rtol=5e-4,
+                               atol=10 ** -(6 - order // 3))
+    # probability rows sum to one at order 0, to zero at every higher order
+    row_sums = jnp.sum(got, axis=-1)
+    np.testing.assert_allclose(row_sums[0], 1.0, rtol=1e-5)
+    if order:
+        np.testing.assert_allclose(row_sums[1:], 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("order", [1, 6])
+@pytest.mark.parametrize("dims", [(6, 8), (21, 16), (4, 1)])
+def test_jet_rms_norm_sweep(order, dims):
+    b, w = dims
+    key = jax.random.PRNGKey(10 + order)
+    c = jax.random.normal(key, (order + 1, b, w), jnp.float32) * 0.8
+    # keep the mean square away from zero: near ms ~ eps the rsqrt jet is
+    # genuinely ill-conditioned (esp. w=1) and f32 kernel-vs-ref parity
+    # would measure cancellation noise, not kernel arithmetic
+    c = c.at[0].set(c[0] + jnp.where(c[0] >= 0, 1.0, -1.0))
+    gamma = jnp.linspace(0.5, 1.5, w, dtype=jnp.float32)
+    got = jet_rms_norm_pallas(c, gamma, eps=1e-6, block_b=8, interpret=True)
+    want = ref.jet_rms_norm_ref(c, gamma, 1e-6)
+    np.testing.assert_allclose(got, want, rtol=5e-4,
+                               atol=10 ** -(6 - order // 3))
+
+
+def test_attention_ref_matches_core_jet_algebra():
+    """The new refs are themselves validated against the independent core
+    jet algebra (einsum Cauchy conv + softmax/rms_norm recurrences)."""
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (5, 4, 3, 6), jnp.float64) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (5, 4, 3, 6), jnp.float64) * 0.5
+    scale = 1.0 / math.sqrt(6.0)
+    s = J.scale(J.einsum("...qd,...kd->...qk", J.Jet(q), J.Jet(k)), scale)
+    want = J.softmax(s, axis=-1).coeffs
+    got = ref.jet_attention_scores_ref(q, k, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+    c = jax.random.normal(jax.random.fold_in(key, 2), (5, 4, 6), jnp.float64)
+    gamma = jnp.linspace(0.5, 1.5, 6, dtype=jnp.float64)
+    want = J.rms_norm(J.Jet(c), gamma, eps=1e-6).coeffs
+    got = ref.jet_rms_norm_ref(c, gamma, 1e-6)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_attention_scores_dispatch_folds_batch_axes():
+    """ops.jet_attention_scores folds (batch, head) axes into the kernel
+    grid and unfolds on the way out -- the layout SelfAttention emits."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (4, 3, 2, 3, 4), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (4, 3, 2, 3, 4), jnp.float32) * 0.5
+    out = ops.jet_attention_scores(q, k, 0.5)
+    assert out.shape == (4, 3, 2, 3, 3)
+    for h in range(2):
+        np.testing.assert_allclose(
+            out[:, :, h], ops.jet_attention_scores(q[:, :, h], k[:, :, h], 0.5),
+            rtol=2e-5, atol=2e-6)
+
+
+def test_fused_kernels_grads_flow_through_reference_recompute():
+    """The custom_vjp backward of both new ops recomputes through the ref
+    path and matches autodiff of the ref directly (same contract as
+    jet_dense)."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (3, 5, 2, 4), jnp.float64) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (3, 5, 2, 4), jnp.float64) * 0.5
+    loss = lambda f: lambda a, b: jnp.sum(f(a, b) ** 2)
+    g_ker = jax.grad(loss(lambda a, b: ops.jet_attention_scores(a, b, 0.5)),
+                     argnums=(0, 1))(q, k)
+    g_ref = jax.grad(loss(lambda a, b: ref.jet_attention_scores_ref(a, b, 0.5)),
+                     argnums=(0, 1))(q, k)
+    for a, b in zip(g_ker, g_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8)
+
+    c = jax.random.normal(jax.random.fold_in(key, 2), (3, 5, 6), jnp.float64)
+    gamma = jnp.linspace(0.5, 1.5, 6, dtype=jnp.float64)
+    g_ker = jax.grad(lambda x, g: jnp.sum(ops.jet_rms_norm(x, g) ** 2),
+                     argnums=(0, 1))(c, gamma)
+    g_ref = jax.grad(lambda x, g: jnp.sum(ref.jet_rms_norm_ref(x, g) ** 2),
+                     argnums=(0, 1))(c, gamma)
+    for a, b in zip(g_ker, g_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8)
+
+
+def test_supports_epilogue_registry():
+    """The fused-op registry names both the dense-kernel activations and the
+    dedicated attention/norm kernels; unknown names stay unfused; the
+    narrow activation query excludes the fused-op names (a Dense leaf must
+    never hand jet_dense a name its Taylor tables cannot evaluate)."""
+    for name in ("tanh", "sigmoid", "sin", "rms_norm", "attention_scores"):
+        assert ops.supports_epilogue(name)
+    for name in ("softplus", "layer_norm", "flash_attention"):
+        assert not ops.supports_epilogue(name)
+    for name in ("tanh", "sigmoid", "sin"):
+        assert ops.supports_activation_epilogue(name)
+    for name in ("rms_norm", "attention_scores", "softplus"):
+        assert not ops.supports_activation_epilogue(name)
 
 
 def test_tables_are_static_and_exact():

@@ -44,15 +44,21 @@ def _exact_fn(op):
 
 
 # ---------------------------------------------------------------------------
-# oracle 1: nested autodiff -- the full registry sweep across every engine
+# oracle 1: nested autodiff -- the full registry sweep across every engine.
+# The autodiff reference residual is the expensive half of each comparison
+# (O(M^order) towers, dominated by navier-stokes), so it is computed ONCE
+# per (operator, shape) and shared across the engine-spec params instead of
+# being rebuilt three times -- coverage is identical, wall clock is not.
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ALL_OPS)
-def test_residual_ntp_matches_autodiff(name):
-    op, net, params, x = _net_and_pts(name)
-    ours = residual_values(params, op, x, net=net, engine="ntp")
-    ref = residual_values(params, op, x, net=net, engine="autodiff")
-    np.testing.assert_allclose(ours, ref, rtol=1e-8, atol=1e-9)
+_AUTODIFF_REF_CACHE = {}
+
+
+def _autodiff_ref(cache_key, op, net, params, x):
+    if cache_key not in _AUTODIFF_REF_CACHE:
+        _AUTODIFF_REF_CACHE[cache_key] = residual_values(
+            params, op, x, net=net, engine="autodiff")
+    return _AUTODIFF_REF_CACHE[cache_key]
 
 
 @pytest.mark.parametrize("spec", ENGINE_SPECS)
@@ -63,9 +69,14 @@ def test_registry_sweep_all_engines(name, spec):
     oracle.  The pallas path gets float-precision-scale tolerance (its
     kernels accumulate differently), the jnp paths double-precision-scale."""
     op, net, params, x = _net_and_pts(name, n=6, width=8, depth=2)
-    got = residual_values(params, op, x, net=net,
-                          engine=DerivativeEngine.from_spec(spec))
-    ref = residual_values(params, op, x, net=net, engine="autodiff")
+    ref = _autodiff_ref(("dense", name), op, net, params, x)
+    if spec == "autodiff":
+        # the reference IS this spec's run (same from_spec code path built
+        # the cache); rerunning the tower would only re-time a tautology
+        got = ref
+    else:
+        got = residual_values(params, op, x, net=net,
+                              engine=DerivativeEngine.from_spec(spec))
     tol = dict(rtol=2e-5, atol=2e-6) if spec == "ntp/pallas" \
         else dict(rtol=1e-8, atol=1e-9)
     assert got.shape == ref.shape
@@ -169,15 +180,19 @@ def test_transformer_trunk_residuals_match_autodiff(name, spec):
     """The attention trunk rides the operator subsystem like every MLP:
     residuals under each engine spec match the nested-autodiff oracle,
     including the d_out=2 system (shared trunk, one output column per
-    field)."""
+    field).  ntp/pallas runs the FUSED attention-score + rms_norm kernels
+    end to end.  The autodiff reference is cache-shared across specs."""
     from repro.core.network import Transformer
     op = get_operator(name)
     net = Transformer(op.d_in, 8, 1, op.d_out, n_heads=2)
     params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
     x = sample_box(jax.random.PRNGKey(1), op.domain, 5, jnp.float64)
-    got = residual_values(params, op, x, net=net,
-                          engine=DerivativeEngine.from_spec(spec))
-    ref = residual_values(params, op, x, net=net, engine="autodiff")
+    ref = _autodiff_ref(("transformer", name), op, net, params, x)
+    if spec == "autodiff":
+        got = ref
+    else:
+        got = residual_values(params, op, x, net=net,
+                              engine=DerivativeEngine.from_spec(spec))
     tol = dict(rtol=2e-5, atol=2e-6) if spec == "ntp/pallas" \
         else dict(rtol=1e-7, atol=1e-8)
     assert got.shape == ref.shape
@@ -221,6 +236,28 @@ def test_advection_diffusion_consumes_cross_polarization():
     r_nomix = op.residual(x, DerivTable(table._pure,
                                         {(1, 2): jnp.zeros(x.shape[0])}))
     assert float(jnp.max(jnp.abs(r_full - r_nomix))) > 1e-6
+
+
+def test_deriv_table_comp_out_of_range_regression():
+    """Dedicated lock on ``comp=`` bounds checking (previously only hit
+    indirectly through system sweeps): every out-of-range component index --
+    positive, negative, on pure and mixed lookups, on promoted
+    single-component and genuine multi-component tables -- must raise
+    IndexError instead of letting jnp's clamping serve the wrong field."""
+    single = DerivTable(jnp.zeros((2, 3, 4)), {(0, 1): jnp.zeros(4)})
+    two = DerivTable(
+        jnp.arange(2 * 3 * 4 * 2, dtype=jnp.float64).reshape(2, 3, 4, 2),
+        {(0, 1): jnp.arange(8, dtype=jnp.float64).reshape(4, 2)})
+    for table, n_comp in ((single, 1), (two, 2)):
+        assert table.n_components == n_comp
+        for bad in (n_comp, n_comp + 3, -1):
+            with pytest.raises(IndexError, match=f"comp={bad}"):
+                table(0, 0, comp=bad)
+            with pytest.raises(IndexError, match=f"comp={bad}"):
+                table.mixed(0, 1, comp=bad)
+    # in-range reads address the exact component (no silent clamping)
+    np.testing.assert_allclose(two(1, 2, comp=1), two._pure[1, 2, :, 1])
+    np.testing.assert_allclose(two.mixed(1, 0, comp=1), two._mixed[(0, 1)][:, 1])
 
 
 def test_deriv_table_surface():
@@ -287,7 +324,17 @@ def test_cross_symmetry_of_mixed_partials():
 # generic loss + trainer surface
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", DIFFABLE_OPS)
+# Loss-level engine agreement runs on a structurally representative subset:
+# heat (scalar), advection-diffusion (d_in=3 + a genuine mixed partial),
+# gray-scott (d_out=2 system).  The loss assembles the SAME derivative
+# table as residual_values, and the full operator x engine matrix stays
+# oracle-gated at the residual level by test_registry_sweep_all_engines --
+# repeating every O(M^4) navier-stokes autodiff tower at the loss level
+# bought only tier-1 minutes (the systems still train e2e below).
+LOSS_STRUCTURAL_OPS = ("heat", "advection-diffusion", "gray-scott")
+
+
+@pytest.mark.parametrize("name", LOSS_STRUCTURAL_OPS)
 def test_generic_loss_engines_agree(name):
     op, net, params, x = _net_and_pts(name, n=16, width=10, depth=2)
     bc = boundary_grid(op.domain, 6, jnp.float64)
@@ -303,11 +350,12 @@ def test_generic_loss_engines_agree(name):
     np.testing.assert_allclose(float(l1), float(l3), rtol=1e-12)
 
 
-@pytest.mark.parametrize("name", ALL_OPS)
+@pytest.mark.parametrize("name", LOSS_STRUCTURAL_OPS + ("burgers",))
 def test_loss_identical_across_all_engine_objects(name):
-    """Every registered operator produces the same loss under NTPEngine('jnp'),
-    NTPEngine('pallas'), and AutodiffEngine() through the object API, and the
-    spec-string path agrees bit-for-bit with the object path."""
+    """The structural subset (plus burgers' non-differentiable-exact path)
+    produces the same loss under NTPEngine('jnp'), NTPEngine('pallas'), and
+    AutodiffEngine() through the object API, and the spec-string path agrees
+    bit-for-bit with the object path."""
     op = get_operator(name)
     net = DenseMLP(op.d_in, 10, 2, op.d_out)
     params = init_mlp(jax.random.PRNGKey(2), op.d_in, 10, 2, op.d_out,
@@ -379,11 +427,11 @@ def test_boundary_and_eval_grids():
     assert ge.shape == (25, 2)
 
 
-def test_train_operator_smoke():
+def test_train_operator_smoke(trained_operator):
     cfg = OperatorRunConfig(op="heat", width=8, depth=2, adam_steps=4,
                             n_domain=32, n_bc=8, log_every=2,
                             eval_pts_per_axis=8)
-    res = train_operator(cfg)
+    res = trained_operator(cfg)
     assert res.op_name == "heat"
     assert np.isfinite(res.l2_error)
     assert len(res.loss_history) >= 2
@@ -391,14 +439,14 @@ def test_train_operator_smoke():
 
 @pytest.mark.parametrize("engine", ("ntp", "ntp/pallas"))
 @pytest.mark.parametrize("name", ("gray-scott", "navier-stokes"))
-def test_new_systems_train_end_to_end(name, engine):
+def test_new_systems_train_end_to_end(name, engine, trained_operator):
     """Acceptance: both new systems train end to end under ntp/jnp AND
     ntp/pallas -- the d_out=2 network and the 4th-order streamfunction
     operator run the full pinn_loss/train_operator path."""
     cfg = OperatorRunConfig(op=name, engine=engine, width=8, depth=2,
                             adam_steps=3, n_domain=16, n_bc=4, log_every=1,
                             eval_pts_per_axis=5)
-    res = train_operator(cfg)
+    res = trained_operator(cfg)
     assert res.op_name == name
     assert np.isfinite(res.l2_error)
     assert all(np.isfinite(v) for v in res.loss_history)
