@@ -5,11 +5,14 @@ Two classes of check, with different strictness (CI runners have noisy
 timings, but coverage is exact):
 
 * **coverage (hard failure)** -- every (suite, name) pair present in the
-  baseline must appear in the current run, and every operator in the
-  registry must appear under every benchmarked engine spec.  A new operator
-  or suite that silently drops out of the benchmark matrix fails the PR;
-  a newly *added* row does not (it will enter the baseline when
-  ``baseline_smoke.json`` is regenerated).
+  baseline must appear in the current run, every operator in the registry
+  must appear under every benchmarked engine spec, and every serving rate x
+  engine row must appear (the COVERAGE registry maps suite -> expected-row
+  derivation).  A new operator or suite that silently drops out of the
+  benchmark matrix fails the PR; a newly *added* row does not (it will
+  enter the baseline when ``baseline_smoke.json`` is regenerated).
+  Coverage is **suite-scoped**: a ``--only SUITE`` run (the per-suite CI
+  jobs) answers only for its own suite's baseline/registry rows.
 * **timing (warn-only by default)** -- rows slower than ``--max-ratio``
   times their baseline are reported; pass ``--strict-timing`` to turn those
   warnings into failures (meant for dedicated perf hardware, not shared CPU
@@ -64,31 +67,80 @@ def expected_operator_rows() -> set:
     return rows
 
 
+def expected_serving_rows() -> set:
+    """Every engine spec at every offered request rate -- derived from the
+    serving benchmark's own axes, so narrowing the rate sweep or dropping a
+    spec from the serving matrix fails the gate like a dropped operator."""
+    from .operators_bench import SPECS
+    from .serving_bench import RATES, row_name
+    return {("serving", row_name(spec, rate))
+            for spec in SPECS for rate in RATES}
+
+
+# suite name -> expected-coverage derivation; a suite absent here is gated
+# only on its baseline rows, not on a registry
+COVERAGE = {"operators": expected_operator_rows,
+            "serving": expected_serving_rows}
+
+
+def run_scope(cur: dict, base: dict = None) -> set:
+    """The suites a run is accountable for.  A ``--only SUITE`` run answers
+    for that suite alone (so the per-suite CI jobs don't fail on each
+    other's baseline rows); a full run answers for every suite in the
+    baseline, the current results, and the coverage registry."""
+    if cur.get("only"):
+        return {cur["only"]}
+    suites = {r["suite"] for r in cur["results"]} | set(COVERAGE)
+    if base is not None:
+        suites |= {r["suite"] for r in base["results"]}
+    return suites
+
+
+def expected_rows(scope: set) -> set:
+    rows = set()
+    for suite in scope & set(COVERAGE):
+        rows |= COVERAGE[suite]()
+    return rows
+
+
 def update_baseline(args, cur: dict) -> None:
-    """Promote a fresh, complete ``--json`` run to the checked-in baseline."""
+    """Promote a fresh, complete ``--json`` run to the checked-in baseline.
+
+    A ``--only SUITE`` run is merged: its suite's rows replace that suite in
+    the existing baseline and every other suite's rows are kept, so the
+    operators and serving baselines can be regenerated independently."""
     if cur.get("failed_suites"):
         raise SystemExit(f"refusing to update baseline: suites raised during "
                          f"the run: {sorted(cur['failed_suites'])}")
     try:
-        old_mode = load(args.baseline).get("mode")
+        old = load(args.baseline)
     except (OSError, SystemExit):
-        old_mode = None                  # no existing baseline to match
-    if old_mode is not None and cur.get("mode") != old_mode:
+        old = None                       # no existing baseline to match
+    if old is not None and cur.get("mode") != old.get("mode"):
         raise SystemExit(
             f"refusing to update baseline: existing {args.baseline} is a "
-            f"{old_mode!r} run but --current is {cur.get('mode')!r}; shapes "
-            f"(and therefore timings) are not comparable -- rerun with "
-            f"matching flags or point --baseline at a new file")
-    missing = sorted(expected_operator_rows() - set(index(cur)))
+            f"{old.get('mode')!r} run but --current is {cur.get('mode')!r}; "
+            f"shapes (and therefore timings) are not comparable -- rerun "
+            f"with matching flags or point --baseline at a new file")
+    scope = run_scope(cur)
+    missing = sorted(expected_rows(scope) - set(index(cur)))
     if missing:
         raise SystemExit("refusing to update baseline: registered rows "
                          "missing from the run:\n  " +
                          "\n  ".join(f"{s}/{n}" for s, n in missing))
+    merged = dict(cur)
+    kept = ([r for r in old["results"] if r["suite"] not in scope]
+            if (old is not None and cur.get("only")) else [])
+    merged["results"] = sorted(kept + cur["results"],
+                               key=lambda r: (r["suite"], r["name"]))
+    if kept:
+        merged["only"] = None            # the baseline is now multi-suite
     with open(args.baseline, "w") as fh:
-        json.dump(cur, fh, indent=1, sort_keys=True)
+        json.dump(merged, fh, indent=1, sort_keys=True)
         fh.write("\n")
     print(f"baseline updated: {args.baseline} <- {args.current} "
-          f"({len(cur['results'])} rows, mode={cur.get('mode')!r})")
+          f"({len(cur['results'])} new rows, {len(kept)} kept, "
+          f"mode={cur.get('mode')!r})")
 
 
 def main() -> None:
@@ -123,22 +175,23 @@ def main() -> None:
             f"comparable at matching shapes (rerun with matching flags or "
             f"regenerate the baseline)")
     bidx, cidx = index(base), index(cur)
+    scope = run_scope(cur, base)
     failures, warnings = [], []
 
     if cur.get("failed_suites"):
         failures.append(f"suites raised during the run: "
                         f"{sorted(cur['failed_suites'])}")
 
-    missing = sorted(set(bidx) - set(cidx))
+    missing = sorted({k for k in bidx if k[0] in scope} - set(cidx))
     if missing:
         failures.append("rows present in the baseline but missing from the "
                         "current run:\n  " +
                         "\n  ".join(f"{s}/{n}" for s, n in missing))
 
-    missing_ops = sorted(expected_operator_rows() - set(cidx))
-    if missing_ops:
-        failures.append("registered operators without benchmark coverage:\n"
-                        "  " + "\n  ".join(f"{s}/{n}" for s, n in missing_ops))
+    missing_reg = sorted(expected_rows(scope) - set(cidx))
+    if missing_reg:
+        failures.append("registered rows without benchmark coverage:\n"
+                        "  " + "\n  ".join(f"{s}/{n}" for s, n in missing_reg))
 
     for key in sorted(set(bidx) & set(cidx)):
         b, c = bidx[key]["us_per_call"], cidx[key]["us_per_call"]

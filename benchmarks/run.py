@@ -45,7 +45,7 @@ def main() -> None:
         ap.error("--full and --smoke are mutually exclusive")
 
     from . import (burgers_e2e, fwd_bwd, memory_scaling, operators_bench,
-                   partition_growth, ratio_grid, roofline)
+                   partition_growth, ratio_grid, roofline, serving_bench)
 
     mode = "smoke" if args.smoke else ("full" if args.full else "fast")
     # one entry per suite: (runner, {mode: kwargs}) -- a new suite added here
@@ -74,6 +74,11 @@ def main() -> None:
             "fast": dict(n_pts=256, trials=2, include_pallas=False),
             "full": dict(n_pts=1024, trials=5, include_pallas=True,
                          network_axis=operators_bench.NETWORK_AXIS)}),
+        "serving": (serving_bench.run, {
+            # rate axis (RATES) is mode-independent so row names -- and the
+            # compare.py coverage gate derived from them -- stay stable
+            mode_key: dict(kw) for mode_key, kw
+            in serving_bench.MODE_KWARGS.items()}),
         "burgers_e2e": (burgers_e2e.run, {
             "smoke": dict(adam_steps=4, lbfgs_steps=2),
             "fast": dict(adam_steps=40, lbfgs_steps=8),

@@ -1,0 +1,158 @@
+"""Serving latency/throughput benchmark: p50/p99 vs offered request rate.
+
+For every registered engine spec a :class:`repro.serving.DerivativeServer`
+is stood up over a trained-shape dense network and an open-loop client
+offers ``grid(x, order)`` requests at a fixed rate (requests/second); the
+row records the p50 end-to-end latency (``us_per_call``) with p99,
+achieved throughput, and overload count in the derived field.  Sweeping the
+rate axis exposes the knee where queue wait dominates compute -- the number
+a "millions of users" deployment sizes against -- and the per-spec rows
+make the engines comparable at identical traffic.
+
+Rows ride the standard ``name,us_per_call,derived`` CSV and the
+``BENCH_*.json`` machinery; ``compare.py`` derives serving coverage
+expectations from :data:`RATES` x :data:`SPECS` here, so dropping a rate or
+an engine from the sweep fails the CI gate like a dropped operator.
+
+Standalone (CI runs this per commit):
+
+  PYTHONPATH=src python -m benchmarks.serving_bench --smoke \\
+      --json BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.runtime.metrics import percentile
+from repro.serving import DerivativeServer, ServerOverloadedError
+
+from .common import csv_row
+from .operators_bench import SPECS, spec_tag
+
+# Offered request rates (requests/second).  Deliberately mode-independent:
+# row NAMES must be stable across smoke/fast/full so the compare.py coverage
+# gate (keyed on RATES x SPECS) and the checked-in baseline stay valid; the
+# modes scale request COUNTS and shapes instead.
+RATES = (25, 50, 100)
+
+# per-mode kwargs, shared with benchmarks/run.py's suite registry
+MODE_KWARGS = {
+    "smoke": dict(n_requests=8, n_pts=8, width=8, depth=2, order=2),
+    "fast": dict(n_requests=40, n_pts=32, width=16, depth=2, order=2),
+    "full": dict(n_requests=200, n_pts=64, width=24, depth=3, order=4),
+}
+
+
+def row_name(spec: str, rate: int) -> str:
+    return f"serve_grid_{spec_tag(spec)}_rate{rate}"
+
+
+def _offer(server: DerivativeServer, queries, rate: float, n_requests: int,
+           order: int):
+    """Open-loop client: submit at the offered rate, then collect."""
+    futures = []
+    overloaded = 0
+    t0 = time.monotonic()
+    for i in range(n_requests):
+        target = t0 + i / rate
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        try:
+            futures.append(server.submit(queries[i % len(queries)],
+                                         order=order))
+        except ServerOverloadedError:
+            overloaded += 1
+    results = [f.result(timeout=120.0) for f in futures]
+    elapsed = time.monotonic() - t0
+    return results, elapsed, overloaded
+
+
+def run(n_requests: int = 40, n_pts: int = 32, width: int = 16,
+        depth: int = 2, order: int = 2, d_in: int = 2, rates=RATES,
+        specs=SPECS):
+    """One row per engine spec x offered rate: p50 latency (us_per_call),
+    p99/throughput/overloads in derived."""
+    from repro.core.network import make_network
+
+    # NOTE: default dtype on purpose -- like operators_bench, this suite
+    # never flips jax_enable_x64 (process-global; it would change every
+    # suite after this one), so timing stays dtype-uniform across suites
+    net = make_network("dense", d_in=d_in, d_out=1, width=width, depth=depth)
+    params = net.init(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    # two request sizes exercise two buckets; all within the bucket set
+    queries = [jax.random.uniform(k, (n, d_in))
+               for k, n in zip(keys, (n_pts, max(n_pts // 2, 1)) * 2)]
+
+    rows = []
+    for spec in specs:
+        with DerivativeServer(net, params, spec, flush_window_s=0.002,
+                              max_queue=max(4 * n_requests, 64)) as server:
+            # warm both buckets so rate rows measure dispatch, not compile
+            for q in queries[:2]:
+                server.grid(q, order, timeout=300.0)
+            for rate in rates:
+                results, elapsed, overloaded = _offer(
+                    server, queries, rate, n_requests, order)
+                lat = [r.latency_s for r in results]
+                p50, p99 = percentile(lat, 50), percentile(lat, 99)
+                thr = len(results) / elapsed if elapsed > 0 else 0.0
+                pad = (sum(r.pad_fraction for r in results)
+                       / max(len(results), 1))
+                derived = (f"p99_us={p99 * 1e6:.1f};"
+                           f"throughput_rps={thr:.1f};offered_rps={rate};"
+                           f"order={order};n={len(results)};"
+                           f"overloaded={overloaded};"
+                           f"pad_frac={pad:.2f}")
+                rows.append(csv_row(row_name(spec, rate), p50, derived))
+    return rows
+
+
+def main() -> None:
+    """Standalone driver mirroring run.py's --smoke/--full/--json contract
+    for the serving suite only (CI invokes this per commit)."""
+    import argparse
+    import json
+    import sys
+    import traceback
+
+    from .run import BENCH_SCHEMA_VERSION, parse_row
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
+    mode = "smoke" if args.smoke else ("full" if args.full else "fast")
+
+    print("name,us_per_call,derived")
+    records, failed = [], []
+    try:
+        for row in run(**MODE_KWARGS[mode]):
+            print(row)
+            sys.stdout.flush()
+            records.append(parse_row("serving", mode, row))
+    except Exception:
+        traceback.print_exc()
+        failed.append("serving")
+
+    if args.json:
+        payload = {"schema_version": BENCH_SCHEMA_VERSION, "mode": mode,
+                   "only": "serving", "failed_suites": failed,
+                   "results": records}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,17 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self) -> None:
+        """Remove ``step_<N>.tmp`` left by a crashed writer.  A live writer
+        never spans manager construction (save/save_async run under this
+        instance), so anything ``.tmp`` at init is dead weight that
+        ``all_steps`` would otherwise silently skip forever."""
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
@@ -93,6 +104,24 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    @staticmethod
+    def _check_leaves(step: int, path: str, stored: set, wanted: set) -> None:
+        """Fail restore loudly when the checkpoint's leaf set and ``like``'s
+        diverge, naming the offending paths (the manifest is authoritative
+        when present; the shard keys back it up for pre-manifest dirs)."""
+        manifest_path = os.path.join(path, "manifest.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                stored = set(json.load(f).get("leaves", stored))
+        missing = sorted(wanted - stored)   # in `like`, absent from ckpt
+        extra = sorted(stored - wanted)     # in ckpt, absent from `like`
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint step {step} does not match the `like` tree:\n"
+                f"  leaves missing from the checkpoint: {missing or 'none'}\n"
+                f"  checkpoint leaves absent from `like`: {extra or 'none'}\n"
+                f"(checkpoint: {path})")
+
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Rebuild ``like``-structured pytree; reshard onto ``shardings``
         (elastic: the target mesh may differ from the writer's)."""
@@ -103,6 +132,7 @@ class CheckpointManager:
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         flat_keys = list(_flatten(like))
         assert len(flat_keys) == len(leaves_like)
+        self._check_leaves(step, path, set(arrays), set(flat_keys))
         shard_leaves = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
             if shardings is not None else [None] * len(leaves_like))

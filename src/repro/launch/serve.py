@@ -5,7 +5,10 @@
 
 Serving realism on this CPU container is at reduced scale; the production
 decode path (ring-buffer caches, recurrent states, sharded serve_step) is the
-same code the decode_32k / long_500k dry-run cells lower.
+same code the decode_32k / long_500k dry-run cells lower.  ``--reduced`` and
+``--greedy`` default on and are disabled with ``--no-reduced`` /
+``--no-greedy`` (non-greedy decode samples from the softmax with a fixed
+seed).
 """
 
 from __future__ import annotations
@@ -22,21 +25,53 @@ from repro.configs.base import ShapeCfg
 from repro.models import (decode_state_specs, decode_step, init_model, prefill)
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args()
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="argmax decode; --no-greedy samples from the "
+                         "logits (seeded)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="PRNG seed for --no-greedy sampling")
+    args = ap.parse_args(argv)
+    if args.prompt_len < 1:
+        # the first generated token conditions on the last prompt logit; an
+        # empty prompt would leave the SSM warm-up loop with logits=None
+        # (and the attention prefill with nothing to prefill)
+        ap.error("--prompt-len must be >= 1: decode is seeded from the last "
+                 "prompt position's logits")
+    if args.gen < 1:
+        ap.error("--gen must be >= 1")
+    return args
+
+
+def select_token(logits: jnp.ndarray, *, greedy: bool,
+                 key: jax.Array | None = None) -> jnp.ndarray:
+    """Next-token choice from (batch, vocab) logits: argmax when greedy,
+    seeded categorical sampling otherwise.  Returns (batch, 1) int32."""
+    if greedy:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    if key is None:
+        raise ValueError("non-greedy decoding needs a PRNG key")
+    return jax.random.categorical(key, logits, axis=-1)[:, None] \
+        .astype(jnp.int32)
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     key = jax.random.PRNGKey(0)
     params, _ = init_model(cfg, key)
+    sample_key = jax.random.PRNGKey(args.sample_seed)
 
     shape = ShapeCfg("serve", args.prompt_len, args.batch, "prefill")
     batch = synthetic_batch(cfg, shape, 0)
@@ -48,7 +83,8 @@ def main() -> None:
     if cfg.block_type == "attn":
         logits, st = prefill(params, cfg, batch, pad_to=cap)
     else:
-        # SSM-family: warm the recurrent state token by token
+        # SSM-family: warm the recurrent state token by token (prompt_len
+        # >= 1 is enforced at parse time, so logits is always bound here)
         st = decode_state_specs(cfg, args.batch, cap, abstract=False)
         st["pos"] = jnp.asarray(0, jnp.int32)
         logits = None
@@ -56,18 +92,21 @@ def main() -> None:
             logits, st = step(params, batch["tokens"][:, t:t + 1], st)
     t_prefill = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    sample_key, sub = jax.random.split(sample_key)
+    tok = select_token(logits, greedy=args.greedy, key=sub)
     out_tokens = [tok]
     t0 = time.perf_counter()
     for _ in range(args.gen - 1):
         logits, st = step(params, tok, st)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        sample_key, sub = jax.random.split(sample_key)
+        tok = select_token(logits, greedy=args.greedy, key=sub)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen} greedy={args.greedy}")
     print(f"prefill {t_prefill*1e3:.1f} ms | decode {t_decode*1e3:.1f} ms "
           f"({t_decode/max(args.gen-1,1)*1e3:.2f} ms/token)")
     print("sample generations:", gen[:2].tolist())

@@ -87,8 +87,6 @@ def train(cfg: PINNRunConfig) -> PINNResult:
                                  engine=cfg.engine,
                                  activation=cfg.activation, bc_vals=bc_vals)
 
-    vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
-
     # ---------------- Adam phase
     state = adam_init((params, lam_raw))
     pts, origin_pts = resample(k_pts, -cfg.domain, cfg.domain,
@@ -121,16 +119,20 @@ def train(cfg: PINNRunConfig) -> PINNResult:
     # ---------------- L-BFGS phase (fixed grid, full batch, as in the paper)
     grid = uniform_grid(-cfg.domain, cfg.domain, cfg.n_domain, dtype)
     ogrid = uniform_grid(-cfg.origin_radius, cfg.origin_radius, cfg.n_origin, dtype)
+    vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
 
     def vg_flat(ps):
         (loss, aux), grads = vg(ps, grid, ogrid)
         return loss, grads
 
     t0 = time.perf_counter()
+    # the callback samples lambda only: res.loss_history already carries the
+    # full per-iteration L-BFGS losses, so appending them here as well would
+    # double-count the phase with interleaved every-10th duplicates
     res = lbfgs(vg_flat, ps, steps=cfg.lbfgs_steps,
                 callback=lambda it, f, p: (
-                    loss_hist.append(f),
-                    lam_hist.append(float(_lam_of(p[1], window)))) if it % 10 == 0 else None)
+                    lam_hist.append(float(_lam_of(p[1], window)))
+                    if it % 10 == 0 else None))
     lbfgs_time = time.perf_counter() - t0
 
     params, lam_raw = res.params

@@ -1,2 +1,3 @@
+from .metrics import LatencyStats, percentile
 from .pipeline import gpipe, pipeline_bubble_fraction
 from .trainer import Trainer, TrainerConfig, TrainerReport

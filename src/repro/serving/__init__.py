@@ -1,0 +1,22 @@
+"""Batched high-order-derivative serving (the inference side of the stack).
+
+``DerivativeServer`` fronts a trained network + derivative engine with a
+request queue, shape-bucketed microbatching, a compiled-executable LRU
+cache, explicit overload/timeout errors, and per-request metrics.  See
+``examples/serve_operator.py`` for the end-to-end path (train -> checkpoint
+-> serve) and ``benchmarks/serving_bench.py`` for the latency/throughput
+benchmark riding the BENCH_*.json machinery.
+"""
+
+from .bucketing import (DEFAULT_BUCKETS, RequestTooLargeError, pad_fraction,
+                        pad_to, pick_bucket)
+from .cache import ExecutableCache, ExecutableKey
+from .server import (DerivativeServer, RequestTimeoutError, ServedResult,
+                     ServerClosedError, ServerOverloadedError)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "DerivativeServer", "ExecutableCache",
+    "ExecutableKey", "RequestTimeoutError", "RequestTooLargeError",
+    "ServedResult", "ServerClosedError", "ServerOverloadedError",
+    "pad_fraction", "pad_to", "pick_bucket",
+]

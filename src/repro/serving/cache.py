@@ -1,0 +1,85 @@
+"""Compiled-executable cache for the derivative server.
+
+Each distinct ``(network id, engine spec, grid|cross, order/axes, bucket
+shape, dtype)`` tuple lowers to its own XLA executable; the server compiles
+on first use (AOT, via ``jax.jit(...).lower(...).compile()``) and caches the
+result so the hot path is a dispatch, never a trace.  Eviction is LRU with a
+configurable capacity -- a server cycling through more shapes than the
+capacity trades recompiles for memory -- and the hit/miss/eviction counters
+feed the server's metrics surface.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+
+@dataclass(frozen=True)
+class ExecutableKey:
+    """Everything that changes the compiled program.
+
+    ``request`` is ``(order,)`` for a pure-derivative grid or the axes tuple
+    for a mixed partial; ``bucket`` is the padded batch size the executable
+    was specialized to.
+    """
+
+    net_id: str
+    engine_spec: str
+    kind: str                 # "grid" | "cross"
+    request: Tuple[int, ...]
+    bucket: int
+    dtype: str
+
+
+class ExecutableCache:
+    """LRU map ExecutableKey -> compiled executable, with stats (thread-safe).
+
+    ``get_or_build(key, builder)`` returns ``(executable, hit)``; the builder
+    runs outside the lock guard only on a miss (compiles can take seconds --
+    holding the lock would stall the stats surface, and a duplicate concurrent
+    build is harmless: last writer wins, both executables are correct).
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[ExecutableKey, Callable]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_build(self, key: ExecutableKey,
+                     builder: Callable[[], Callable]) -> Tuple[Callable, bool]:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key], True
+            self.misses += 1
+        fn = builder()
+        with self._lock:
+            self._entries[key] = fn
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return fn, False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: ExecutableKey) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "size": len(self._entries),
+                    "capacity": self.capacity}

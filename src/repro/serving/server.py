@@ -1,0 +1,378 @@
+"""Batched high-order-derivative serving.
+
+A :class:`DerivativeServer` holds one trained network + one derivative
+engine and answers ``(x, order)`` / ``(x, axes)`` queries with derivative
+tables -- the inference side of the paper's pitch: once n-TangentProp makes
+order-n derivatives quasilinear, a trained PINN can return values *and*
+derivatives per query batch in a hot loop.  The moving parts:
+
+* requests enter a **bounded queue**; a full queue raises
+  :class:`ServerOverloadedError` immediately (explicit backpressure, never a
+  silent hang);
+* a worker thread waits one **flush window** after the first arrival so
+  concurrent clients with the same (kind, order/axes, dtype) **coalesce
+  into one launch**, concatenated and zero-padded to the smallest admissible
+  bucket (see :mod:`repro.serving.bucketing`);
+* each (bucket, request) pair is compiled once and cached with LRU eviction
+  (:mod:`repro.serving.cache`); input buffers are donated on accelerator
+  backends so the padded batch is consumed in place;
+* every response carries per-request metrics (queue wait, pad fraction,
+  cache hit, end-to-end latency) and the server aggregates p50/p99 over a
+  sliding window (:class:`repro.runtime.metrics.LatencyStats`).
+
+Construction is either direct (``DerivativeServer(net, params, "ntp")``) or
+from a training checkpoint (:meth:`DerivativeServer.from_checkpoint`, via
+``ckpt.CheckpointManager`` -- the path ``examples/serve_operator.py``
+drives end to end).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutureTimeout
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import DerivativeEngine
+from repro.core.network import Network
+from repro.runtime.metrics import LatencyStats
+
+from .bucketing import DEFAULT_BUCKETS, pad_fraction, pad_to, pick_bucket
+from .cache import ExecutableCache, ExecutableKey
+
+
+class ServerOverloadedError(RuntimeError):
+    """The request queue is at capacity; retry with backoff."""
+
+
+class RequestTimeoutError(TimeoutError):
+    """The per-request deadline elapsed before a result was ready."""
+
+
+class ServerClosedError(RuntimeError):
+    """The server was closed while the request was pending."""
+
+
+@dataclass(frozen=True)
+class _GroupKey:
+    """Requests coalesce only within a group: same computation, same dtype."""
+
+    kind: str                  # "grid" | "cross"
+    request: Tuple[int, ...]   # (order,) for grid, axes tuple for cross
+    dtype: str
+
+
+@dataclass
+class ServedResult:
+    """A derivative table plus the request's structured metrics.
+
+    ``table`` is ``(d_in, order+1, N, d_out)`` for grid requests and
+    ``(N, d_out)`` for cross requests, with N the caller's row count (pad
+    rows are sliced off before delivery).
+    """
+
+    table: jnp.ndarray
+    queue_wait_s: float
+    latency_s: float
+    bucket: int
+    batch_rows: int            # live rows in the coalesced launch
+    pad_fraction: float
+    cache_hit: bool
+
+
+@dataclass
+class _Pending:
+    x: jnp.ndarray
+    group: _GroupKey
+    future: Future
+    t_submit: float
+
+
+class DerivativeServer:
+    """Serve ``engine.grid`` / ``engine.cross`` over a request queue.
+
+    Parameters
+    ----------
+    net, params : the trained network and its parameter pytree.
+    engine : engine spec string ("ntp", "ntp/pallas", "autodiff", ...) or a
+        :class:`DerivativeEngine` instance.
+    buckets : admissible padded batch sizes (sorted ascending).
+    flush_window_s : how long the batcher waits after the first request of a
+        batch for more coalescible requests (0 disables coalescing).
+    max_queue : queue-depth bound; submits beyond it raise
+        :class:`ServerOverloadedError`.
+    cache_capacity : LRU capacity of the compiled-executable cache.
+    autostart : start the worker thread (tests drive :meth:`_drain_once`
+        synchronously with ``autostart=False``).
+    """
+
+    def __init__(self, net: Network, params, engine="ntp", *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 flush_window_s: float = 0.002, max_queue: int = 256,
+                 cache_capacity: int = 32, net_id: Optional[str] = None,
+                 autostart: bool = True):
+        self.net = net
+        self.params = params
+        self.engine = DerivativeEngine.from_spec(engine)
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError("need at least one bucket size")
+        self.flush_window_s = float(flush_window_s)
+        self.max_queue = int(max_queue)
+        self.net_id = net_id or (f"{type(net).__name__}"
+                                 f"(d_in={net.d_in},d_out={net.d_out})")
+        self.cache = ExecutableCache(capacity=cache_capacity)
+
+        self._q: "deque[_Pending]" = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._worker: Optional[threading.Thread] = None
+
+        self.queue_wait = LatencyStats()
+        self.latency = LatencyStats()
+        self._n_requests = 0
+        self._n_batches = 0
+        self._pad_sum = 0.0
+
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def from_checkpoint(cls, directory: str, net: Network, *,
+                        step: Optional[int] = None, dtype=jnp.float64,
+                        engine="ntp", init_key: Optional[jax.Array] = None,
+                        **kwargs) -> "DerivativeServer":
+        """Restore ``net``'s parameters from a ``ckpt.CheckpointManager``
+        directory (latest step by default) and serve them."""
+        from repro.ckpt import CheckpointManager
+
+        mgr = CheckpointManager(directory)
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints under {directory!r}")
+        like = net.init(init_key if init_key is not None
+                        else jax.random.PRNGKey(0), dtype=dtype)
+        params = mgr.restore(step, like)
+        return cls(net, params, engine, **kwargs)
+
+    def start(self) -> None:
+        if self._worker is None:
+            self._worker = threading.Thread(target=self._run, daemon=True,
+                                            name="derivative-server")
+            self._worker.start()
+
+    def close(self) -> None:
+        """Stop the worker; pending requests fail with ServerClosedError."""
+        with self._cv:
+            self._closed = True
+            pending = list(self._q)
+            self._q.clear()
+            self._cv.notify_all()
+        for item in pending:
+            item.future.set_exception(
+                ServerClosedError("server closed before the request ran"))
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def __enter__(self) -> "DerivativeServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- submit
+    def submit(self, x: jnp.ndarray, *, order: Optional[int] = None,
+               axes: Optional[Sequence[int]] = None) -> Future:
+        """Enqueue a request; returns a Future resolving to ServedResult.
+
+        Exactly one of ``order`` (pure-derivative grid through that order)
+        or ``axes`` (one mixed partial) must be given.
+        """
+        if (order is None) == (axes is None):
+            raise ValueError("pass exactly one of order= or axes=")
+        x = jnp.asarray(x)
+        if x.ndim != 2 or x.shape[1] != self.net.d_in:
+            raise ValueError(f"x must be (N, {self.net.d_in}), "
+                             f"got shape {tuple(x.shape)}")
+        pick_bucket(x.shape[0], self.buckets)   # typed size/empty validation
+        if order is not None:
+            if order < 0:
+                raise ValueError(f"order must be >= 0, got {order}")
+            group = _GroupKey("grid", (int(order),), str(x.dtype))
+        else:
+            group = _GroupKey("cross", tuple(int(a) for a in axes),
+                              str(x.dtype))
+
+        item = _Pending(x=x, group=group, future=Future(),
+                        t_submit=time.monotonic())
+        with self._cv:
+            if self._closed:
+                raise ServerClosedError("server is closed")
+            if len(self._q) >= self.max_queue:
+                raise ServerOverloadedError(
+                    f"request queue at capacity ({self.max_queue}); "
+                    "shed load or raise max_queue")
+            self._q.append(item)
+            self._n_requests += 1
+            self._cv.notify_all()
+        return item.future
+
+    def grid(self, x: jnp.ndarray, order: int, *,
+             timeout: Optional[float] = None) -> jnp.ndarray:
+        """Blocking pure-derivative table: (d_in, order+1, N, d_out)."""
+        return self._result(self.submit(x, order=order), timeout).table
+
+    def cross(self, x: jnp.ndarray, axes: Sequence[int], *,
+              timeout: Optional[float] = None) -> jnp.ndarray:
+        """Blocking mixed partial d^m f / dx_axes: (N, d_out)."""
+        return self._result(self.submit(x, axes=axes), timeout).table
+
+    @staticmethod
+    def _result(future: Future, timeout: Optional[float]) -> ServedResult:
+        try:
+            return future.result(timeout)
+        except _FutureTimeout:
+            raise RequestTimeoutError(
+                f"no result within {timeout}s (queue depth or compile "
+                "stall; see server.metrics())") from None
+
+    # -------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._q and not self._closed:
+                    self._cv.wait()
+                if self._closed:
+                    return
+            self._wait_flush_window()
+            self._drain_once()
+
+    def _wait_flush_window(self) -> None:
+        """Give concurrent clients one window to coalesce; flush early when
+        the queue already fills the largest bucket."""
+        if self.flush_window_s <= 0:
+            return
+        deadline = time.monotonic() + self.flush_window_s
+        with self._cv:
+            while not self._closed:
+                rows = sum(it.x.shape[0] for it in self._q)
+                remaining = deadline - time.monotonic()
+                if rows >= self.buckets[-1] or remaining <= 0:
+                    return
+                self._cv.wait(remaining)
+
+    def _drain_once(self) -> bool:
+        """Take one coalescible batch off the queue and execute it.
+
+        Returns False when the queue was empty.  The batch is the head
+        request plus every queued request sharing its group, in arrival
+        order, up to the largest bucket; other groups stay queued for the
+        next drain.
+        """
+        with self._cv:
+            if not self._q:
+                return False
+            first = self._q.popleft()
+            batch = [first]
+            rows = first.x.shape[0]
+            deferred = []
+            while self._q:
+                item = self._q.popleft()
+                if (item.group == first.group
+                        and rows + item.x.shape[0] <= self.buckets[-1]):
+                    batch.append(item)
+                    rows += item.x.shape[0]
+                else:
+                    deferred.append(item)
+            self._q.extend(deferred)
+        self._execute(batch)
+        return True
+
+    def _execute(self, batch: Sequence[_Pending]) -> None:
+        t_batch = time.monotonic()
+        group = batch[0].group
+        ns = [it.x.shape[0] for it in batch]
+        total = sum(ns)
+        try:
+            bucket = pick_bucket(total, self.buckets)
+            xp = pad_to(jnp.concatenate([it.x for it in batch], axis=0)
+                        if len(batch) > 1 else batch[0].x, bucket)
+            key = ExecutableKey(self.net_id, self.engine.spec, group.kind,
+                                group.request, bucket, group.dtype)
+            fn, hit = self.cache.get_or_build(
+                key, lambda: self._compile(group, bucket))
+            out = fn(self.params, xp)
+        except Exception as exc:                    # noqa: BLE001 -- fulfilled
+            for it in batch:                        # per-request, not raised
+                it.future.set_exception(exc)        # into the worker loop
+            return
+
+        frac = pad_fraction(total, bucket)
+        self._n_batches += 1
+        self._pad_sum += frac
+        offset = 0
+        for it, n in zip(batch, ns):
+            seg = (out[:, :, offset:offset + n]
+                   if group.kind == "grid" else out[offset:offset + n])
+            offset += n
+            now = time.monotonic()
+            self.queue_wait.record(t_batch - it.t_submit)
+            self.latency.record(now - it.t_submit)
+            it.future.set_result(ServedResult(
+                table=seg, queue_wait_s=t_batch - it.t_submit,
+                latency_s=now - it.t_submit, bucket=bucket,
+                batch_rows=total, pad_fraction=frac, cache_hit=hit))
+
+    def _compile(self, group: _GroupKey, bucket: int):
+        """AOT-compile the engine call at the bucket shape.
+
+        The padded query buffer is donated on accelerator backends (it is
+        built per launch and dead afterwards); CPU ignores donation, so skip
+        it there to keep logs clean.
+        """
+        engine, net = self.engine, self.net
+        if group.kind == "grid":
+            order = group.request[0]
+
+            def compute(p, x):
+                return engine.grid(net, p, x, order)
+        else:
+            axes = group.request
+
+            def compute(p, x):
+                return engine.cross(net, p, x, axes)
+
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        x_spec = jax.ShapeDtypeStruct((bucket, net.d_in),
+                                      np.dtype(group.dtype))
+        return jax.jit(compute, donate_argnums=donate) \
+            .lower(self.params, x_spec).compile()
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        """Aggregated server metrics: request/batch counts, queue-wait and
+        end-to-end latency snapshots (p50/p99), mean pad fraction, and the
+        executable-cache counters."""
+        with self._cv:
+            n_req, n_batch = self._n_requests, self._n_batches
+            pad_sum, depth = self._pad_sum, len(self._q)
+        return {
+            "requests": n_req,
+            "batches": n_batch,
+            "queue_depth": depth,
+            "queue_wait": self.queue_wait.snapshot(),
+            "latency": self.latency.snapshot(),
+            "pad_fraction_mean": (pad_sum / n_batch) if n_batch else 0.0,
+            "cache": self.cache.stats(),
+        }
