@@ -25,9 +25,10 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.runtime.metrics import percentile
-from repro.serving import DerivativeServer, ServerOverloadedError
+from repro.serving import DerivativeServer, ServerOverloadedError, pick_bucket
 
 from .common import csv_row
 from .operators_bench import SPECS, spec_tag
@@ -84,17 +85,28 @@ def run(n_requests: int = 40, n_pts: int = 32, width: int = 16,
     net = make_network("dense", d_in=d_in, d_out=1, width=width, depth=depth)
     params = net.init(jax.random.PRNGKey(0))
     keys = jax.random.split(jax.random.PRNGKey(1), 4)
-    # two request sizes exercise two buckets; all within the bucket set
+    # two request sizes, n_pts and n_pts//2 (same bucket in smoke, distinct
+    # buckets in fast/full); coalescing can also merge them into larger
+    # launches, so the server's bucket set is derived below to cover every
+    # reachable launch shape and each bucket is warmed before the rate sweep
+    n_half = max(n_pts // 2, 1)
     queries = [jax.random.uniform(k, (n, d_in))
-               for k, n in zip(keys, (n_pts, max(n_pts // 2, 1)) * 2)]
+               for k, n in zip(keys, (n_pts, n_half) * 2)]
+    # capping the largest bucket at bucket(n_pts + n_half) bounds coalescing
+    # to shapes the warm-up loop compiled -- a cold bucket on a measured row
+    # would fold compile time into p99
+    buckets = tuple(sorted({pick_bucket(m)
+                            for m in (n_half, n_pts, n_pts + n_half)}))
 
     rows = []
     for spec in specs:
-        with DerivativeServer(net, params, spec, flush_window_s=0.002,
+        with DerivativeServer(net, params, spec, buckets=buckets,
+                              flush_window_s=0.002,
                               max_queue=max(4 * n_requests, 64)) as server:
-            # warm both buckets so rate rows measure dispatch, not compile
-            for q in queries[:2]:
-                server.grid(q, order, timeout=300.0)
+            # warm every reachable bucket so rate rows measure dispatch,
+            # never compile
+            for b in buckets:
+                server.grid(jnp.zeros((b, d_in)), order, timeout=300.0)
             for rate in rates:
                 results, elapsed, overloaded = _offer(
                     server, queries, rate, n_requests, order)

@@ -36,22 +36,34 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 stale_tmp_age_s: float = 3600.0):
         self.dir = directory
         self.keep = keep
+        self.stale_tmp_age_s = stale_tmp_age_s
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._sweep_stale_tmp()
 
     def _sweep_stale_tmp(self) -> None:
-        """Remove ``step_<N>.tmp`` left by a crashed writer.  A live writer
-        never spans manager construction (save/save_async run under this
-        instance), so anything ``.tmp`` at init is dead weight that
-        ``all_steps`` would otherwise silently skip forever."""
+        """Remove ``step_<N>.tmp`` left by a crashed writer -- dead weight
+        that ``all_steps`` would otherwise silently skip forever.  Only dirs
+        untouched for ``stale_tmp_age_s`` are swept: this manager is not
+        necessarily the only writer (e.g. a server constructing a manager
+        over a directory a trainer is actively checkpointing into, or
+        another process), and a LIVE writer's tmp dir has a fresh mtime --
+        every shard/manifest write refreshes it."""
+        now = time.time()
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and name.endswith(".tmp"):
-                shutil.rmtree(os.path.join(self.dir, name),
-                              ignore_errors=True)
+            if not (name.startswith("step_") and name.endswith(".tmp")):
+                continue
+            path = os.path.join(self.dir, name)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue                 # raced with its writer's rename
+            if age >= self.stale_tmp_age_s:
+                shutil.rmtree(path, ignore_errors=True)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
@@ -72,7 +84,9 @@ class CheckpointManager:
     def _write(self, step: int, arrays: Dict[str, np.ndarray]) -> None:
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):          # crashed writer's leftovers for THIS
+            shutil.rmtree(tmp)           # step: clear them however fresh, so
+        os.makedirs(tmp)                 # stray files never reach `final`
         np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
         manifest = {"step": step, "time": time.time(),
                     "leaves": sorted(arrays), "n_shards": 1}

@@ -39,11 +39,17 @@ def pick_bucket(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
         f"({max(buckets)}); split the request or configure larger buckets")
 
 
-def pad_to(x: jnp.ndarray, bucket: int) -> jnp.ndarray:
-    """Zero-pad ``x`` (N, d_in) to (bucket, d_in); no copy when N == bucket."""
+def pad_to(x: jnp.ndarray, bucket: int, *, copy: bool = False) -> jnp.ndarray:
+    """Zero-pad ``x`` (N, d_in) to (bucket, d_in).
+
+    On an exact fit the input is returned unchanged unless ``copy=True``,
+    which forces a fresh buffer the caller owns -- required when the launch
+    donates its input (donating an array the client still holds would delete
+    it out from under them).
+    """
     n = x.shape[0]
     if n == bucket:
-        return x
+        return jnp.array(x, copy=True) if copy else x
     if n > bucket:
         raise ValueError(f"cannot pad {n} rows down to bucket {bucket}")
     pad = jnp.zeros((bucket - n,) + x.shape[1:], x.dtype)

@@ -31,7 +31,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from concurrent.futures import TimeoutError as _FutureTimeout
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
@@ -129,6 +129,9 @@ class DerivativeServer:
         self.net_id = net_id or (f"{type(net).__name__}"
                                  f"(d_in={net.d_in},d_out={net.d_out})")
         self.cache = ExecutableCache(capacity=cache_capacity)
+        # donation frees the padded launch buffer in place on accelerators;
+        # CPU ignores it, so skip there to keep logs clean
+        self._donate = jax.default_backend() != "cpu"
 
         self._q: "deque[_Pending]" = deque()
         self._cv = threading.Condition()
@@ -179,8 +182,11 @@ class DerivativeServer:
             self._q.clear()
             self._cv.notify_all()
         for item in pending:
-            item.future.set_exception(
-                ServerClosedError("server closed before the request ran"))
+            try:
+                item.future.set_exception(
+                    ServerClosedError("server closed before the request ran"))
+            except InvalidStateError:
+                pass                     # client already cancelled it
         if self._worker is not None:
             self._worker.join()
             self._worker = None
@@ -275,27 +281,31 @@ class DerivativeServer:
     def _drain_once(self) -> bool:
         """Take one coalescible batch off the queue and execute it.
 
-        Returns False when the queue was empty.  The batch is the head
-        request plus every queued request sharing its group, in arrival
-        order, up to the largest bucket; other groups stay queued for the
-        next drain.
+        Returns False when no batch ran (queue empty, or every admissible
+        request had already been cancelled by its client).  The batch is the
+        first live request plus every queued request sharing its group, in
+        arrival order, up to the largest bucket; other groups stay queued
+        for the next drain.  Dequeued requests are moved to the future's
+        RUNNING state; ones a client cancelled while queued are dropped here
+        -- fulfilling a cancelled future raises InvalidStateError, which
+        would kill the worker thread.
         """
         with self._cv:
-            if not self._q:
-                return False
-            first = self._q.popleft()
-            batch = [first]
-            rows = first.x.shape[0]
-            deferred = []
+            batch, deferred, rows = [], [], 0
             while self._q:
                 item = self._q.popleft()
-                if (item.group == first.group
-                        and rows + item.x.shape[0] <= self.buckets[-1]):
-                    batch.append(item)
-                    rows += item.x.shape[0]
-                else:
+                if batch and not (item.group == batch[0].group
+                                  and rows + item.x.shape[0]
+                                  <= self.buckets[-1]):
                     deferred.append(item)
+                    continue
+                if not item.future.set_running_or_notify_cancel():
+                    continue             # cancelled while queued: drop
+                batch.append(item)
+                rows += item.x.shape[0]
             self._q.extend(deferred)
+        if not batch:
+            return False
         self._execute(batch)
         return True
 
@@ -306,8 +316,14 @@ class DerivativeServer:
         total = sum(ns)
         try:
             bucket = pick_bucket(total, self.buckets)
+            # the launch buffer must be server-owned when it is donated: a
+            # single exact-fit request would otherwise hand the CLIENT's
+            # array to the executable, which deletes it in place (copy=
+            # forces a fresh buffer in that one aliasing case; concatenation
+            # and padding already produce fresh arrays)
             xp = pad_to(jnp.concatenate([it.x for it in batch], axis=0)
-                        if len(batch) > 1 else batch[0].x, bucket)
+                        if len(batch) > 1 else batch[0].x, bucket,
+                        copy=self._donate and len(batch) == 1)
             key = ExecutableKey(self.net_id, self.engine.spec, group.kind,
                                 group.request, bucket, group.dtype)
             fn, hit = self.cache.get_or_build(
@@ -337,9 +353,12 @@ class DerivativeServer:
     def _compile(self, group: _GroupKey, bucket: int):
         """AOT-compile the engine call at the bucket shape.
 
-        The padded query buffer is donated on accelerator backends (it is
-        built per launch and dead afterwards); CPU ignores donation, so skip
-        it there to keep logs clean.
+        The query buffer is donated on accelerator backends; _execute
+        guarantees the server owns it (padding/concatenation build a fresh
+        array per launch, and the one aliasing case -- a single exact-fit
+        request -- is copied before launch), so donation never deletes a
+        client's array.  CPU ignores donation, so skip it there to keep
+        logs clean.
         """
         engine, net = self.engine, self.net
         if group.kind == "grid":
@@ -353,7 +372,7 @@ class DerivativeServer:
             def compute(p, x):
                 return engine.cross(net, p, x, axes)
 
-        donate = (1,) if jax.default_backend() != "cpu" else ()
+        donate = (1,) if self._donate else ()
         x_spec = jax.ShapeDtypeStruct((bucket, net.d_in),
                                       np.dtype(group.dtype))
         return jax.jit(compute, donate_argnums=donate) \

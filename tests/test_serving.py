@@ -64,6 +64,9 @@ def test_pad_to_zero_rows_and_identity(x5):
     np.testing.assert_array_equal(np.asarray(padded[:5]), np.asarray(x5))
     np.testing.assert_array_equal(np.asarray(padded[5:]), 0.0)
     assert pad_to(x5, 5) is x5                    # exact fit: no copy
+    forced = pad_to(x5, 5, copy=True)             # ...unless the caller (a
+    assert forced is not x5                       # donating launch) needs to
+    np.testing.assert_array_equal(np.asarray(forced), np.asarray(x5))
     assert pad_fraction(5, 8) == pytest.approx(3 / 8)
 
 
@@ -183,6 +186,70 @@ def test_single_request_picks_smallest_bucket(net, params):
         assert fut.result(0).bucket == 4
     finally:
         server.close()
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_exact_fit_request_never_lends_client_buffer_to_donation(net, params):
+    """A single request whose row count exactly fits a bucket must not reach
+    a donating executable as the CLIENT's own array -- donation deletes the
+    input buffer in place, and pre-fix the client's jnp array was deleted
+    out from under it on accelerator backends (pad_to returns x unchanged
+    on an exact fit)."""
+    server = DerivativeServer(net, params, "ntp", buckets=(8,),
+                              autostart=False)
+    server._donate = True       # emulate an accelerator backend on CPU
+    launched = {}
+    orig = server.cache.get_or_build
+
+    def spy(key, builder):
+        fn, hit = orig(key, builder)
+
+        def wrapped(p, xp):
+            launched["xp"] = xp
+            return fn(p, xp)
+        return wrapped, hit
+
+    server.cache.get_or_build = spy
+    x = jax.random.uniform(jax.random.PRNGKey(8), (8, 2), jnp.float64)
+    try:
+        fut = server.submit(x, order=1)
+        assert server._drain_once()
+        res = fut.result(0)
+    finally:
+        server.close()
+    assert launched["xp"] is not x          # server-owned copy, not an alias
+    assert res.table.shape == (2, 2, 8, 1)
+    _ = np.asarray(x)   # client's array still alive (a donated-and-deleted
+    #                     array raises "Array has been deleted" here)
+
+
+def test_cancelled_request_is_dropped_not_fatal(net, params, x5):
+    """A client cancelling a still-queued future must not kill the worker:
+    pre-fix _execute called set_result on the cancelled future, raising
+    InvalidStateError through the drain loop."""
+    server = DerivativeServer(net, params, "ntp", buckets=(8, 16),
+                              autostart=False)
+    try:
+        f_cancelled = server.submit(x5, order=1)
+        assert f_cancelled.cancel()          # gave up while queued
+        f_live = server.submit(x5, order=1)  # same group: one batch
+        assert server._drain_once()          # pre-fix: InvalidStateError
+        assert f_cancelled.cancelled()
+        assert f_live.result(0).table.shape == (2, 2, 5, 1)
+        # a drain over nothing but cancelled requests runs no batch
+        f2 = server.submit(x5, order=1)
+        assert f2.cancel()
+        assert not server._drain_once()
+    finally:
+        server.close()
+
+
+def test_close_tolerates_cancelled_pending(net, params, x5):
+    server = DerivativeServer(net, params, "ntp", autostart=False)
+    fut = server.submit(x5, order=1)
+    assert fut.cancel()
+    server.close()                           # pre-fix: InvalidStateError
+    assert fut.cancelled()
 
 
 def test_cache_hits_across_repeated_shapes_and_eviction(net, params):
@@ -348,17 +415,39 @@ def test_serve_cli_select_token_consumes_greedy():
 # ---------------------------------------------------------------------------
 
 def test_ckpt_stale_tmp_swept_on_init(tmp_path):
+    import os
+
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"w": jnp.ones(2)}, blocking=True)
     stale = tmp_path / "step_0000000002.tmp"      # crashed writer's leftovers
     stale.mkdir()
     (stale / "shard_0.npz").write_bytes(b"partial")
+    old = 1_000_000_000                           # long past stale_tmp_age_s
+    os.utime(stale, (old, old))
 
     mgr2 = CheckpointManager(str(tmp_path))
     assert not stale.exists()
     assert mgr2.all_steps() == [1]
     np.testing.assert_array_equal(
         np.asarray(mgr2.restore(1, {"w": jnp.zeros(2)})["w"]), 1.0)
+
+
+def test_ckpt_fresh_tmp_survives_other_managers(tmp_path):
+    """A freshly-touched .tmp dir may belong to a LIVE writer in another
+    manager/process (e.g. a server restoring from a directory a trainer is
+    checkpointing into) -- constructing a second manager must not delete it;
+    only this instance rewriting the SAME step clears its leftovers."""
+    live = tmp_path / "step_0000000003.tmp"
+    live.mkdir()
+    (live / "shard_0.npz").write_bytes(b"in-flight")
+
+    mgr = CheckpointManager(str(tmp_path))        # fresh mtime: not swept
+    assert live.exists()
+
+    mgr.save(3, {"w": jnp.ones(2)}, blocking=True)  # same step: tmp cleared,
+    assert not live.exists()                        # write lands atomically
+    np.testing.assert_array_equal(
+        np.asarray(mgr.restore(3, {"w": jnp.zeros(2)})["w"]), 1.0)
 
 
 def test_ckpt_restore_leaf_mismatch_is_loud(tmp_path):
