@@ -59,11 +59,13 @@ def expected_operator_rows() -> set:
     without benchmark coverage fails the gate."""
     from repro.pinn.operators import operator_names
 
-    from .operators_bench import NETWORK_AXIS, NETWORK_AXIS_OP, SPECS, row_name
+    from .operators_bench import (NETWORK_AXIS, NETWORK_AXIS_OP, SPECS,
+                                  TOKEN_AXIS, row_name, token_row_name)
     rows = {("operators", row_name(op, spec))
             for op in operator_names() for spec in SPECS}
     rows |= {("operators", row_name(NETWORK_AXIS_OP, spec, net))
              for net in NETWORK_AXIS for spec in SPECS}
+    rows |= {("operators", token_row_name(t)) for t in TOKEN_AXIS}
     return rows
 
 

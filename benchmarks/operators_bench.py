@@ -32,7 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.engines import DerivativeEngine
+from repro.core.engines import DerivativeEngine, EngineSpec, NTPEngine
 from repro.core.network import make_network
 from repro.data.collocation import sample_box
 from repro.pinn.operators import get_operator, residual_values
@@ -52,10 +52,20 @@ SPECS = ("ntp", "ntp/pallas", "autodiff")
 NETWORK_AXIS = ("residual", "transformer")
 NETWORK_AXIS_OP = "heat"
 
+# the token-count scaling axis: the flash-jet attention kernel's reason to
+# exist is that memory no longer grows with T^2, so the transformer trunk is
+# timed at growing token counts (T = d_in coordinate tokens) under the
+# fused pallas engine; rows are tagged ``flash=1`` and coverage-gated like
+# every other axis
+TOKEN_AXIS = (16, 64, 256)
+TOKEN_AXIS_ORDER = 2
+
 
 def spec_tag(spec: str) -> str:
-    """Engine spec -> the row-name tag used in benchmark output."""
-    return spec.replace("/", "_")
+    """CANONICAL engine spec -> the row-name tag used in benchmark output.
+    Going through :class:`EngineSpec` keeps equivalent spellings ("ntp" vs
+    "ntp/jnp") on one baseline row."""
+    return str(EngineSpec.parse(spec)).replace("/", "_")
 
 
 def row_name(op_name: str, spec: str, network: str = "dense") -> str:
@@ -81,24 +91,48 @@ def _time_case(op, spec: str, network: str, n_pts: int, width: int,
     derived = f"order={op.order};d_in={op.d_in};d_out={op.d_out};" \
               f"net={network}"
     if network == "transformer" and spec.endswith("pallas"):
-        # records whether the fused jet_attention_scores/jet_rms_norm
-        # kernels were REGISTERED for this run (epilogue registry at timing
-        # time).  Registry membership => actual module dispatch is enforced
+        # records whether the fused flash-attention/rms_norm kernels were
+        # REGISTERED for this run (capability registry at timing time).
+        # Registry membership => actual module dispatch is enforced
         # separately by tests/test_parity.py's kernel-invocation guard, so
         # together the tag certifies the row timed the fused path.
         from repro.kernels import ops as kops
-        fused = int(kops.supports_epilogue("attention_scores")
-                    and kops.supports_epilogue("rms_norm"))
+        fused = int("flash_attention" in kops.epilogues()
+                    and "rms_norm" in kops.epilogues())
         derived += f";fused_attn={fused}"
     return t, derived
 
 
+def token_row_name(tokens: int) -> str:
+    return f"tokens_T{tokens}_transformer_{spec_tag('ntp/pallas')}"
+
+
+def _time_token_case(tokens: int, width: int, trials: int) -> tuple:
+    """One flash-path derivative pass on a transformer whose token count is
+    ``tokens`` (coordinate tokens == d_in), timed via the engine surface the
+    serving layer uses.  Depth 1 and a small batch keep the smoke run fast;
+    the axis varies ONLY T, so the rows read as a scaling curve."""
+    net = make_network("transformer", d_in=tokens, d_out=1, width=width,
+                       depth=1)
+    engine = NTPEngine("pallas")
+    params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, tokens), jnp.float64,
+                           -1.0, 1.0)
+    fn = jax.jit(lambda p, pts: engine.derivs(net, p, pts, TOKEN_AXIS_ORDER))
+    t = time_fn(fn, params, x, trials=trials)
+    from repro.kernels import ops as kops
+    flash = int("flash_attention" in kops.epilogues())
+    return t, f"tokens={tokens};order={TOKEN_AXIS_ORDER};flash={flash}"
+
+
 def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
         operators=DEFAULT_OPS, include_pallas: bool = True,
-        network: str = "dense", network_axis=()):
+        network: str = "dense", network_axis=(), token_axis=TOKEN_AXIS):
     """Main sweep: every operator x engine spec on ``network``.  When
     ``network_axis`` names extra architectures, each is additionally timed
-    on :data:`NETWORK_AXIS_OP` under every spec (rows suffixed ``_net-*``)."""
+    on :data:`NETWORK_AXIS_OP` under every spec (rows suffixed ``_net-*``).
+    ``token_axis`` adds the flash-attention token-count scaling rows
+    (pallas-only, so it rides ``include_pallas`` like the pallas specs)."""
     # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
     # and would change the precision (and timings) of every suite after this
     # one.  Timing is dtype-uniform with the other suites instead.
@@ -122,6 +156,11 @@ def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
                                 width, depth, trials)
         rows.append(csv_row(row_name(axis_op.name, case["spec"], case["net"]),
                             t, derived))
+
+    if include_pallas:
+        for tokens in token_axis:
+            t, derived = _time_token_case(tokens, width=8, trials=trials)
+            rows.append(csv_row(token_row_name(tokens), t, derived))
     return rows
 
 

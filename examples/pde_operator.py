@@ -28,6 +28,18 @@ from repro.pinn import (OperatorRunConfig, get_operator,  # noqa: E402
                         operator_names, train_operator)
 
 
+def parse_mask(text: str):
+    """CLI spelling -> SelfAttention mask: none | causal | local:W."""
+    text = text.strip().lower()
+    if text in ("", "none"):
+        return None
+    if text == "causal":
+        return "causal"
+    if text.startswith("local:"):
+        return ("local", int(text.split(":", 1)[1]))
+    raise SystemExit(f"bad --mask {text!r}: expected none | causal | local:W")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--op", default="heat", choices=list(operator_names()))
@@ -39,6 +51,9 @@ def main():
     ap.add_argument("--heads", type=int, default=2,
                     help="attention heads for --network transformer "
                          "(--width must be divisible by it)")
+    ap.add_argument("--mask", default="none",
+                    help="attention mask for --network transformer: "
+                         "none | causal | local:W (e.g. local:4)")
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--lbfgs", type=int, default=0)
     ap.add_argument("--width", type=int, default=32)
@@ -59,6 +74,7 @@ def main():
         net_kwargs["n_features"] = args.fourier_features
     elif args.network == "transformer":
         net_kwargs["n_heads"] = args.heads
+        net_kwargs["mask"] = parse_mask(args.mask)
     cfg = OperatorRunConfig(op=args.op, engine=args.engine,
                             network=args.network, net_kwargs=net_kwargs,
                             adam_steps=args.steps, lbfgs_steps=args.lbfgs,

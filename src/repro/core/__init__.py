@@ -4,8 +4,8 @@ derivative-engine hierarchy."""
 
 from . import jet, modules
 from .activations import TAYLOR_STACKS, tanh_taylor_stack
-from .engines import (AutodiffEngine, DerivativeEngine, JaxJetEngine,
-                      NTPEngine)
+from .engines import (AutodiffEngine, DerivativeEngine, EngineSpec,
+                      JaxJetEngine, NTPEngine)
 from .jet import Jet
 from .modules import (Activation, CoordinateEmbedding, Dense, FourierFeatures,
                       MLPBlock, Module, Residual, RMSNorm, SelfAttention,
@@ -21,7 +21,8 @@ from .partitions import (bell_number, faa_di_bruno_table, partition_count,
 
 __all__ = [
     "jet", "Jet", "modules", "TAYLOR_STACKS", "tanh_taylor_stack",
-    "AutodiffEngine", "DerivativeEngine", "JaxJetEngine", "NTPEngine",
+    "AutodiffEngine", "DerivativeEngine", "EngineSpec", "JaxJetEngine",
+    "NTPEngine",
     "Activation", "CoordinateEmbedding", "Dense", "FourierFeatures",
     "MLPBlock", "Module", "Residual", "RMSNorm", "SelfAttention",
     "Sequential", "TokenPool", "make_module", "module_names",

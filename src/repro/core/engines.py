@@ -33,6 +33,14 @@ Configs address engines by spec string: ``Engine.from_spec("ntp/pallas")``,
 (The pre-redesign ``(engine="ntp", impl="pallas")`` keyword-pair shim was
 removed after its scheduled one-release deprecation window.)
 
+Spec strings have a typed, canonical identity: :class:`EngineSpec` parses
+any accepted spelling (``"ntp"`` == ``"ntp/jnp"``, ``"jet"`` ==
+``"jax-jet"`` == ``"jaxjet"``) to one frozen value whose ``str()`` is the
+canonical form.  Everything keyed on an engine spec -- the serving layer's
+``ExecutableKey.engine_spec``, benchmark row names -- goes through it, so
+equivalent spellings share one compiled-executable cache entry and one
+baseline row.
+
 Every returned array carries a trailing component axis sized ``net.d_out``:
 ``derivs`` is (order+1, N, d_out), ``grid`` (d_in, order+1, N, d_out) and
 ``cross`` (N, d_out), for scalar fields and vector-valued PDE systems alike.
@@ -50,6 +58,75 @@ import jax.numpy as jnp
 
 from . import jet as J
 from .network import Network
+
+# accepted alternate spellings -> canonical engine name
+_SPEC_ALIASES = {"jax-jet": "jet", "jaxjet": "jet"}
+
+# engine name -> implementation variants (None = no /impl suffix allowed)
+_ENGINE_IMPLS = {"ntp": ("jnp", "pallas"), "autodiff": None, "jet": None}
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Typed, canonical identity of an engine configuration.
+
+    ``parse`` accepts every spelling ``from_spec`` does -- a spec string
+    (``"ntp"``, ``"ntp/jnp"``, ``"ntp/pallas"``, ``"autodiff"``, ``"jet"``
+    and its ``"jax-jet"``/``"jaxjet"`` aliases), an :class:`EngineSpec`, or
+    a :class:`DerivativeEngine` instance -- and canonicalizes: ``"ntp"``
+    and ``"ntp/jnp"`` are the SAME value (``impl`` is stored as ``"jnp"``,
+    ``str()`` renders the short form).  ``str(EngineSpec.parse(s))`` is the
+    canonical string every spec-keyed surface must use: the serving cache
+    key (one compiled executable per distinct engine, not per spelling) and
+    benchmark row names (one baseline row).  Round-trip law:
+    ``EngineSpec.parse(str(spec)) == spec``.
+    """
+
+    name: str
+    impl: str | None = None
+
+    def __post_init__(self):
+        impls = _ENGINE_IMPLS.get(self.name)
+        if self.name not in _ENGINE_IMPLS:
+            raise ValueError(f"unknown engine {self.name!r}; want one of "
+                             f"{sorted(_ENGINE_IMPLS)}")
+        if impls is None:
+            if self.impl is not None:
+                raise ValueError(f"engine {self.name!r} takes no /impl "
+                                 f"suffix, got {self.impl!r}")
+        else:
+            impl = self.impl if self.impl is not None else impls[0]
+            if impl not in impls:
+                raise ValueError(f"unknown impl {impl!r} for engine "
+                                 f"{self.name!r} (want one of {impls})")
+            object.__setattr__(self, "impl", impl)
+
+    @staticmethod
+    def parse(spec: "str | EngineSpec | DerivativeEngine") -> "EngineSpec":
+        if isinstance(spec, EngineSpec):
+            return spec
+        if isinstance(spec, DerivativeEngine):
+            return EngineSpec.parse(spec.spec)
+        name, _, impl = str(spec).strip().lower().partition("/")
+        name = _SPEC_ALIASES.get(name, name)
+        try:
+            return EngineSpec(name, impl or None)
+        except ValueError as e:
+            raise ValueError(f"bad engine spec {spec!r}: {e}") from None
+
+    def __str__(self) -> str:
+        default = (_ENGINE_IMPLS.get(self.name) or (None,))[0]
+        if self.impl is None or self.impl == default:
+            return self.name
+        return f"{self.name}/{self.impl}"
+
+    def build(self) -> "DerivativeEngine":
+        """Instantiate the engine this spec names."""
+        if self.name == "ntp":
+            return NTPEngine(self.impl)
+        if self.name == "autodiff":
+            return AutodiffEngine()
+        return JaxJetEngine()
 
 
 class DerivativeEngine:
@@ -113,20 +190,12 @@ class DerivativeEngine:
     @staticmethod
     def from_spec(spec: "str | DerivativeEngine") -> "DerivativeEngine":
         """``"ntp"`` | ``"ntp/pallas"`` | ``"autodiff"`` | ``"jet"`` -> engine.
-        Engine instances pass through unchanged."""
+        Engine instances pass through unchanged; every string spelling goes
+        through :meth:`EngineSpec.parse`, so aliases and the ``"ntp"`` ==
+        ``"ntp/jnp"`` equivalence are handled in one place."""
         if isinstance(spec, DerivativeEngine):
             return spec
-        name, _, impl = spec.strip().lower().partition("/")
-        if name == "ntp":
-            return NTPEngine(impl or "jnp")
-        if impl:
-            raise ValueError(f"engine {name!r} takes no /impl suffix: {spec!r}")
-        if name == "autodiff":
-            return AutodiffEngine()
-        if name in ("jet", "jax-jet", "jaxjet"):
-            return JaxJetEngine()
-        raise ValueError(f"unknown engine spec {spec!r}; want 'ntp[/impl]', "
-                         "'autodiff', or 'jet'")
+        return EngineSpec.parse(spec).build()
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.spec!r})"

@@ -390,7 +390,23 @@ def activation(a: Jet, name: str) -> Jet:
 # softmax & norms (built from the primitives; used by attention jets)
 # ---------------------------------------------------------------------------
 
-def softmax(a: Jet, axis: int = -1) -> Jet:
+# Finite stand-in for -inf at masked softmax positions: exp underflows to
+# exactly 0 (killing the whole e-jet there by the exp recurrence), while
+# arithmetic on it stays NaN-free -- a true -inf would produce inf - inf
+# under the shift and 0 * inf in the recurrences.  Shared with the Pallas
+# flash kernel (kernels/jet_attention.py).
+MASK_NEG = -1e30
+
+
+def softmax(a: Jet, axis: int = -1, mask: jnp.ndarray | None = None) -> Jet:
+    """Softmax jet over ``axis``; ``mask`` is an optional t-constant boolean
+    keep-matrix (True = attend, broadcastable against the coefficients).
+    Masked positions are replaced by the constant jet ``MASK_NEG`` *before*
+    the exp recurrence, so their probability jets vanish identically at
+    every order and no inf/NaN enters even under differentiation.  Every
+    row of the reduced axis must keep at least one position."""
+    if mask is not None:
+        a = where(mask, a, MASK_NEG)
     shift = jax.lax.stop_gradient(jnp.max(a.coeffs[0], axis=axis, keepdims=True))
     e = exp(sub(a, const(shift, a.order, like=a)))
     s = reduce_sum(e, axis=axis, keepdims=True)

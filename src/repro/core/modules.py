@@ -23,12 +23,16 @@ convolutions (attention scores!), and through smooth scalars via Faa di
 Bruno.  ``impl="pallas"`` routes every Dense contraction through the fused
 kernel dispatch (``repro.kernels.ops.jet_dense``, which accepts arbitrary
 leading batch axes -- token axes included -- and fuses the activation
-epilogue when ``ops.supports_activation_epilogue(name)``), the
-attention-score chain
-through ``ops.jet_attention_scores`` and rms_norm through
-``ops.jet_rms_norm`` (the ``"attention_scores"`` / ``"rms_norm"`` entries
-of the same epilogue registry); anything unfused runs the reference jet
-algebra, so a module mixes kernel and reference paths freely.
+epilogue when ``ops.epilogues()`` marks the name ``ACTIVATION``), the whole
+attention layer through the single-launch ``ops.jet_flash_attention`` and
+rms_norm through ``ops.jet_rms_norm`` (the ``"flash_attention"`` /
+``"rms_norm"`` ``FUSED_OP`` entries of the same typed epilogue registry);
+anything unfused runs the reference jet algebra, so a module mixes kernel
+and reference paths freely.  ``SelfAttention`` carries the attention-mask
+surface (``mask=None | "causal" | ("local", window)``, canonicalized by
+:func:`normalize_attention_mask`), honoured identically by the primal
+``apply``, the jnp jet path (``J.softmax(mask=...)``), and the flash
+kernel's per-block index test.
 
 Leaves register themselves in a name -> factory registry
 (:func:`register_module`) so configs and future conversion tools can build
@@ -79,10 +83,63 @@ def _check_impl(impl: str) -> None:
 
 
 def _has_epilogue(name: str) -> bool:
-    """Lazy wrapper over ``kernels.ops.supports_epilogue`` (kept lazy so the
-    module layer imports without pulling the Pallas stack in)."""
+    """Lazy wrapper over the typed capability registry
+    ``kernels.ops.epilogues()`` (kept lazy so the module layer imports
+    without pulling the Pallas stack in)."""
     from repro.kernels import ops as kops
-    return kops.supports_epilogue(name)
+    return name in kops.epilogues()
+
+
+def _is_activation_epilogue(name: str) -> bool:
+    """Lazy: can the dense kernel run ``name`` in its Faa di Bruno epilogue
+    (``epilogues()[name] is EpilogueKind.ACTIVATION``)?  The FUSED_OP
+    entries ("rms_norm", "attention_scores", "flash_attention") are NOT
+    dense epilogues and must take their own dispatch."""
+    from repro.kernels import ops as kops
+    return kops.epilogues().get(name) is kops.EpilogueKind.ACTIVATION
+
+
+# every canonical attention-mask kind normalize_attention_mask can emit;
+# the registry the parity sweep's mask coverage is asserted against
+ATTENTION_MASK_KINDS = ("none", "causal", "local")
+
+
+def normalize_attention_mask(mask) -> tuple:
+    """Canonicalize an attention-mask spec to a hashable ``(kind, window)``
+    pair: ``None``/"none" -> ("none", 0), "causal" -> ("causal", 0),
+    ("local", w) -> ("local", int(w)) with w >= 1.  The single validation
+    point shared by :class:`SelfAttention` and the flash-kernel dispatch in
+    ``repro.kernels.ops``."""
+    if mask is None or mask == "none" or mask == ("none", 0):
+        return ("none", 0)
+    if mask == "causal" or mask == ("causal", 0):
+        return ("causal", 0)
+    if (isinstance(mask, (tuple, list)) and len(mask) == 2
+            and mask[0] == "local"):
+        window = int(mask[1])
+        if window < 1:
+            raise ValueError(f"local attention window must be >= 1, "
+                             f"got {mask[1]!r}")
+        return ("local", window)
+    raise ValueError(f"unknown attention mask {mask!r}; want None, "
+                     "'causal', or ('local', window)")
+
+
+def attention_mask(mask, t: int) -> jnp.ndarray | None:
+    """Dense (T, T) boolean keep-matrix for a mask spec (None for "none"):
+    what the jnp softmax path, the primal forward, and the flash-kernel
+    backward recompute consume.  ``local(w)`` is a causal sliding window --
+    query q attends keys j with ``q - w < j <= q`` -- so the diagonal is
+    always kept and no query row is ever fully masked."""
+    kind, window = normalize_attention_mask(mask)
+    if kind == "none":
+        return None
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(t)[None, :]
+    keep = kj <= qi
+    if kind == "local":
+        keep = keep & ((qi - kj) < window)
+    return keep
 
 
 def dense_jet(jet: J.Jet, w: jnp.ndarray, b: jnp.ndarray | None,
@@ -101,10 +158,11 @@ def dense_jet(jet: J.Jet, w: jnp.ndarray, b: jnp.ndarray | None,
         from repro.kernels import ops as kops
         if b is None:
             b = jnp.zeros((w.shape[1],), jet.dtype)
-        # the narrow activation-table query, NOT supports_epilogue: the
-        # fused-op registry names ("rms_norm", "attention_scores") are not
-        # dense epilogues and must take the compose-after-kernel path
-        if activation is None or kops.supports_activation_epilogue(activation):
+        # the narrow ACTIVATION-kind query, NOT bare membership: FUSED_OP
+        # registry entries ("rms_norm", "attention_scores",
+        # "flash_attention") are not dense epilogues and must take the
+        # compose-after-kernel path
+        if activation is None or _is_activation_epilogue(activation):
             return J.Jet(kops.jet_dense(jet.coeffs, w, b, activation))
         out = J.Jet(kops.jet_dense(jet.coeffs, w, b, None))
         return J.activation(out, activation)
@@ -159,10 +217,9 @@ class Activation(Module):
     def jet_apply(self, params: Params, jet: J.Jet, *,
                   impl: str = "jnp") -> J.Jet:
         _check_impl(impl)
-        if impl == "pallas":
+        if impl == "pallas" and _is_activation_epilogue(self.name):
             from repro.kernels import ops as kops
-            if kops.supports_activation_epilogue(self.name):
-                return J.Jet(kops.act_jet(jet.coeffs, self.name))
+            return J.Jet(kops.act_jet(jet.coeffs, self.name))
         return J.activation(jet, self.name)
 
 
@@ -237,19 +294,36 @@ class SelfAttention(Module):
     (``x``: (..., T, dim)).  Scores are a jet x jet Cauchy-convolved einsum,
     softmax goes through the exp/div power-series recurrences, and the value
     contraction is a second jet x jet einsum -- the whole block stays inside
-    the quasilinear jet algebra (no nested autodiff anywhere).  Under
-    ``impl="pallas"`` the projections ride the Pallas dense dispatch and the
-    score product + scale + softmax chain runs as ONE fused launch
-    (``ops.jet_attention_scores``, the ``"attention_scores"`` epilogue-
-    registry entry)."""
+    the quasilinear jet algebra (no nested autodiff anywhere).
+
+    ``mask`` opens sequence-structured workloads: ``None`` (dense),
+    ``"causal"``, or ``("local", window)`` -- a causal sliding window where
+    query q attends keys j with ``q - window < j <= q``.  Both paths apply
+    it as a t-constant ``where`` before the softmax recurrences, so masked
+    probability jets vanish identically at every order.
+
+    Under ``impl="pallas"`` the q/k/v projections ride the Pallas dense
+    dispatch and everything downstream -- Cauchy QK^T, scale, masked
+    softmax, value contraction, output projection -- runs as ONE tiled
+    flash-jet launch (``ops.jet_flash_attention``, the ``"flash_attention"``
+    registry entry): an online-softmax recurrence over KV blocks
+    generalized to the coefficient axis, so the (Tq, Tk) score jet never
+    materializes."""
 
     dim: int
     n_heads: int = 2
+    mask: Any = None
 
     def __post_init__(self):
         if self.dim % self.n_heads:
             raise ValueError(f"dim={self.dim} not divisible by "
                              f"n_heads={self.n_heads}")
+        # canonicalize (and validate) so equal masks hash equal and the
+        # spec stays hashable inside the frozen dataclass
+        kind, window = normalize_attention_mask(self.mask)
+        canon = None if kind == "none" else \
+            ("causal" if kind == "causal" else (kind, window))
+        object.__setattr__(self, "mask", canon)
 
     @property
     def head_dim(self) -> int:
@@ -269,6 +343,9 @@ class SelfAttention(Module):
         k = self._split_heads(x @ params["wk"])
         v = self._split_heads(x @ params["wv"])
         s = jnp.einsum("...qhd,...khd->...hqk", q, k) / math.sqrt(self.head_dim)
+        keep = attention_mask(self.mask, x.shape[-2])
+        if keep is not None:
+            s = jnp.where(keep, s, jnp.asarray(J.MASK_NEG, s.dtype))
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("...hqk,...khd->...qhd", p, v)
         return o.reshape(o.shape[:-2] + (self.dim,)) @ params["wo"]
@@ -280,16 +357,18 @@ class SelfAttention(Module):
         k = split(dense_jet(jet, params["wk"], None, None, impl))
         v = split(dense_jet(jet, params["wv"], None, None, impl))
         scale = 1.0 / math.sqrt(self.head_dim)
-        if impl == "pallas" and _has_epilogue("attention_scores"):
-            # fused path: Cauchy-product QK^T + scale + softmax recurrence
-            # in ONE Pallas launch; head axis folds into the kernel batch
+        if impl == "pallas" and _has_epilogue("flash_attention"):
+            # single tiled launch for the whole remaining block; the head
+            # axis stays inside the kernel block so the output projection
+            # (which mixes heads) can fold in as the epilogue
             from repro.kernels import ops as kops
-            qh = jnp.moveaxis(q.coeffs, -2, -3)       # (..., H, Tq, D)
-            kh = jnp.moveaxis(k.coeffs, -2, -3)       # (..., H, Tk, D)
-            p = J.Jet(kops.jet_attention_scores(qh, kh, scale))
-        else:
-            s = J.scale(J.einsum("...qhd,...khd->...hqk", q, k), scale)
-            p = J.softmax(s, axis=-1)
+            to_heads = lambda c: jnp.moveaxis(c, -2, -3)   # (..., H, T, D)
+            return J.Jet(kops.jet_flash_attention(
+                to_heads(q.coeffs), to_heads(k.coeffs), to_heads(v.coeffs),
+                params["wo"], scale, mask=self.mask))
+        s = J.scale(J.einsum("...qhd,...khd->...hqk", q, k), scale)
+        p = J.softmax(s, axis=-1,
+                      mask=attention_mask(self.mask, jet.shape[-2]))
         o = J.einsum("...hqk,...khd->...qhd", p, v)
         o = J.jmap(lambda c: c.reshape(c.shape[:-2] + (self.dim,)), o)
         return dense_jet(o, params["wo"], None, None, impl)

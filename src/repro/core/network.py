@@ -305,18 +305,23 @@ class Transformer(_Composed):
     n_heads: int = 2
     mlp_ratio: int = 2       # feed-forward hidden dim = mlp_ratio * width
     activation: str = "tanh"
+    mask: Any = None         # None | "causal" | ("local", window)
 
     def __post_init__(self):
         if self.width % self.n_heads:
             raise ValueError(f"width={self.width} not divisible by "
                              f"n_heads={self.n_heads}")
+        # validate + canonicalize once here (SelfAttention would anyway):
+        # configs pass lists, the dataclass must stay hashable
+        probe = SelfAttention(self.width, self.n_heads, self.mask)
+        object.__setattr__(self, "mask", probe.mask)
 
     def _graph(self) -> Module:
         mods = [CoordinateEmbedding(self.d_in, self.width)]
         for _ in range(self.depth):
             mods.append(Residual(Sequential((
                 RMSNorm(self.width),
-                SelfAttention(self.width, self.n_heads)))))
+                SelfAttention(self.width, self.n_heads, self.mask)))))
             mods.append(Residual(Sequential((
                 RMSNorm(self.width),
                 MLPBlock(self.width, self.mlp_ratio * self.width,

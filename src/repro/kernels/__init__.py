@@ -3,11 +3,17 @@
 The paper's compute hot-spot is the per-layer jet propagation (stacked GEMM +
 Faa di Bruno activation contraction); ``jet_dense`` fuses both into one VMEM
 round-trip, ``act_jet`` is the standalone pointwise epilogue.  The
-transformer trunk adds ``jet_attention_scores`` (Cauchy-product QK^T + scale
-+ softmax recurrence, one launch per attention layer) and ``jet_rms_norm``
-(mean-square convolution + rsqrt recurrence + gain).  ``ref.py`` holds the
-pure-jnp oracles the test sweeps compare against.
+transformer trunk runs ``jet_flash_attention`` -- the WHOLE attention layer
+(score Cauchy product, tiled online-softmax jet recurrence, value
+contraction, output projection) in a single launch whose working set is
+bounded by its block sizes, never the materialized (T, T) score jet -- and
+``jet_rms_norm`` (mean-square convolution + rsqrt recurrence + gain).
+``jet_attention_scores`` is the PR-5 materializing score kernel, kept for
+benchmarking against.  ``ref.py`` holds the pure-jnp oracles the test sweeps
+compare against; ``ops.epilogues()`` is the typed registry modules consult
+before dispatching here.
 """
 
 from . import ops, ref
-from .ops import act_jet, jet_attention_scores, jet_dense, jet_rms_norm
+from .ops import (EpilogueKind, act_jet, epilogues, jet_attention_scores,
+                  jet_dense, jet_flash_attention, jet_rms_norm)

@@ -38,6 +38,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Finite "minus infinity" for masked score positions: large enough that exp
+# underflows to exactly 0, small enough that (NEG - NEG) stays 0.0 and no
+# inf/NaN can enter the jet recurrences (a true -inf would produce inf-inf).
+MASK_NEG = -1e30
 
 
 def attention_scores_jet_body(q: jnp.ndarray, k: jnp.ndarray,
@@ -121,6 +127,212 @@ def jet_attention_scores_pallas(q: jnp.ndarray, k: jnp.ndarray, scale: float,
         interpret=interpret,
     )(qp, kp)
     return out[:, :bsz]
+
+
+# ---------------------------------------------------------------------------
+# Flash-jet attention: the full block (scores + softmax + value contraction
+# + output projection) in ONE launch, tiled over KV blocks with the online-
+# softmax recurrence generalized to the jet coefficient axis.
+#
+# Per (batch, q-block) the kernel carries three running statistics in VMEM
+# scratch across the innermost KV grid axis:
+#
+#   m  (bb, H, bq)        -- running max of the order-0 masked scores (the
+#                            softmax shift; t-constant, so scalar per row)
+#   t  (n+1, bb, H, bq)   -- running *total* jet: sum_k e_k of the shifted
+#                            exp jet over every key seen so far
+#   a  (n+1, bb, H, bq, D)-- running accumulator jet: the Cauchy product
+#                            e (*) V summed over every key seen so far
+#
+# A shift change m -> m' rescales ALL coefficients of e by the same scalar
+# alpha = exp(m - m'): the shift is t-constant, so exp(s - m') =
+# exp(m - m') * exp(s - m) coefficient-wise.  Hence the flash update
+#
+#   t <- alpha * t + sum_block e,   a <- alpha * a + e (*) V_block.
+#
+# Because a = t (*) o (Cauchy), the epilogue recovers the attention output
+# by JET DIVISION -- flash attention's "divide by the sum at the end"
+# generalized to all orders:
+#
+#   o_0 = a_0 / t_0,   o_m = (a_m - sum_{j=1..m} t_j o_{m-j}) / t_0
+#
+# and immediately contracts o with the (H, Dh, Dm) output projection, so
+# neither the (Tq, Tk) score jet nor the pre-projection per-head output
+# ever materializes in HBM.
+# ---------------------------------------------------------------------------
+
+
+def _flash_block_keep(mask: str, window: int, i, j, block_q: int,
+                      block_k: int, t_k: int) -> jnp.ndarray:
+    """(bq, bk) boolean keep-matrix for q-block i / kv-block j in GLOBAL
+    token coordinates: padded keys are always dropped, then the causal /
+    local variant.  ``local(w)`` is a causal sliding window: query q attends
+    keys j with q - w < j <= q (the diagonal is always kept, so no query
+    row is ever fully masked)."""
+    qi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kj = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    keep = kj < t_k
+    if mask == "causal":
+        keep = keep & (kj <= qi)
+    elif mask == "local":
+        keep = keep & (kj <= qi) & (qi - kj < window)
+    return keep
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, wo_ref, o_ref, m_ref, t_ref, a_ref, *,
+                  scale, mask, window, t_k, block_q, block_k, n_kv):
+    i, j = pl.program_id(1), pl.program_id(2)
+    n1 = q_ref.shape[0]
+    acc_t = m_ref.dtype
+    neg = jnp.asarray(MASK_NEG, acc_t)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, neg, acc_t)
+        t_ref[...] = jnp.zeros(t_ref.shape, acc_t)
+        a_ref[...] = jnp.zeros(a_ref.shape, acc_t)
+
+    q = q_ref[...].astype(acc_t)            # (n1, bb, H, bq, D)
+    k = k_ref[...].astype(acc_t)            # (n1, bb, H, bk, D)
+    v = v_ref[...].astype(acc_t)
+
+    def qk(a_i: int, b_i: int) -> jnp.ndarray:
+        # (bb, H, bq, D) x (bb, H, bk, D) -> (bb, H, bq, bk)
+        return jax.lax.dot_general(
+            q[a_i], k[b_i],
+            dimension_numbers=(((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=acc_t) * scale
+
+    # Cauchy-convolved scores for this tile: s_m = scale * sum Q_i K_j^T
+    s = []
+    for m in range(n1):
+        acc = qk(0, m)
+        for a_i in range(1, m + 1):
+            acc = acc + qk(a_i, m - a_i)
+        s.append(acc)
+
+    keep = _flash_block_keep(mask, window, i, j, block_q, block_k, t_k)
+    keep = keep[None, None]                 # broadcast over (bb, H)
+    s0m = jnp.where(keep, s[0], neg)
+
+    m_old = m_ref[...]                      # (bb, H, bq)
+    m_new = jnp.maximum(m_old, jnp.max(s0m, axis=-1))
+    alpha = jnp.exp(m_old - m_new)          # rescales every e coefficient
+
+    # shifted exp jet for this tile; masked positions' e-jets are exactly 0:
+    # e_0 underflows (exp(NEG - m_new)) and is where'd to 0, and every
+    # higher e_m term carries an e-factor that is already 0
+    e = [jnp.where(keep, jnp.exp(s0m - m_new[..., None]), 0.0)]
+    for m in range(1, n1):
+        acc = m * s[m] * e[0]
+        for b_j in range(1, m):
+            acc = acc + b_j * s[b_j] * e[m - b_j]
+        e.append(acc / m)
+
+    def ev(a_i: int, b_i: int) -> jnp.ndarray:
+        # (bb, H, bq, bk) x (bb, H, bk, D) -> (bb, H, bq, D)
+        return jax.lax.dot_general(
+            e[a_i], v[b_i],
+            dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=acc_t)
+
+    esum, eav = [], []
+    for m in range(n1):
+        esum.append(jnp.sum(e[m], axis=-1))
+        acc = ev(0, m)
+        for a_i in range(1, m + 1):
+            acc = acc + ev(a_i, m - a_i)
+        eav.append(acc)
+
+    t_new = alpha[None] * t_ref[...] + jnp.stack(esum)
+    a_new = alpha[None, ..., None] * a_ref[...] + jnp.stack(eav)
+    m_ref[...] = m_new
+    t_ref[...] = t_new
+    a_ref[...] = a_new
+
+    @pl.when(j == n_kv - 1)
+    def _epilogue():
+        # a = t (*) o  =>  o by jet division, then the output projection.
+        # t_0 >= 1 for every real query row (the row max contributes
+        # exp(0)); the floor only catches padded query rows that a local
+        # window can leave with zero kept keys, making them 0 not NaN.
+        t0 = jnp.maximum(t_new[0], jnp.asarray(1e-37, acc_t))
+        inv0 = 1.0 / t0[..., None]
+        o = [a_new[0] * inv0]
+        for m in range(1, n1):
+            acc = a_new[m]
+            for b_j in range(1, m + 1):
+                acc = acc - t_new[b_j][..., None] * o[m - b_j]
+            o.append(acc * inv0)
+        wo = wo_ref[...].astype(acc_t)      # (H, D, Dm)
+        out = [jax.lax.dot_general(
+            om, wo, dimension_numbers=(((1, 3), (0, 1)), ((), ())),
+            preferred_element_type=acc_t) for om in o]
+        o_ref[...] = jnp.stack(out).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "mask", "window", "block_q", "block_k", "block_b", "interpret"))
+def jet_flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               wo: jnp.ndarray, scale: float,
+                               mask: str = "none", window: int = 0,
+                               block_q: int = 64, block_k: int = 64,
+                               block_b: int = 8,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Tiled flash-jet attention: Q/K/V coefficient stacks (n+1, B, H, T, Dh)
+    plus the output projection (H, Dh, Dm) -> the attention-block output jet
+    (n+1, B, T, Dm), one launch, no materialized (Tq, Tk) score jet.
+
+    Grid is (batch, q-blocks, kv-blocks) with KV innermost; the running
+    max / total-jet / accumulator-jet live in VMEM scratch and carry across
+    the KV axis (TPU grids execute sequentially).  Peak memory is set by the
+    block sizes, not T^2.  ``mask`` in {"none", "causal", "local"}; "local"
+    attends the causal window ``q - window < key <= q``.  Padded batch rows
+    are all-zero (uniform softmax over valid keys) and padded query rows may
+    contain garbage; both slice away on return."""
+    n1, bsz, h, t, d = q.shape
+    if k.shape != q.shape or v.shape != q.shape:
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} vs {k.shape} "
+                         f"vs {v.shape}")
+    if wo.ndim != 3 or wo.shape[:2] != (h, d):
+        raise ValueError(f"wo shape {wo.shape} incompatible with (H, Dh) = "
+                         f"({h}, {d})")
+    if mask not in ("none", "causal", "local"):
+        raise ValueError(f"unknown mask variant {mask!r}")
+    if mask == "local" and window < 1:
+        raise ValueError(f"local mask needs window >= 1, got {window}")
+    dm = wo.shape[2]
+    bb = min(block_b, bsz)
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    pb, pq, pk = (-bsz) % bb, (-t) % bq, (-t) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pb), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pb), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pb), (0, 0), (0, pk), (0, 0)))
+    n_kv = (t + pk) // bk
+    grid = ((bsz + pb) // bb, (t + pq) // bq, n_kv)
+    acc_t = jnp.promote_types(q.dtype, jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, mask=mask,
+                          window=window, t_k=t, block_q=bq, block_k=bk,
+                          n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n1, bb, h, bq, d), lambda b, i, j: (0, b, 0, i, 0)),
+            pl.BlockSpec((n1, bb, h, bk, d), lambda b, i, j: (0, b, 0, j, 0)),
+            pl.BlockSpec((n1, bb, h, bk, d), lambda b, i, j: (0, b, 0, j, 0)),
+            pl.BlockSpec((h, d, dm), lambda b, i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n1, bb, bq, dm), lambda b, i, j: (0, b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, bsz + pb, t + pq, dm), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bb, h, bq), acc_t),
+            pltpu.VMEM((n1, bb, h, bq), acc_t),
+            pltpu.VMEM((n1, bb, h, bq, d), acc_t),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, wo)
+    return out[:, :bsz, :t]
 
 
 def rms_norm_jet_body(x: jnp.ndarray, gamma: jnp.ndarray,

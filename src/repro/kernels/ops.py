@@ -14,23 +14,30 @@ This is also the dispatch surface for the compositional module layer
   dimension, so a transformer block's token axis rides the same fused
   kernel as a flat collocation batch (reshape is free: it never copies and
   is transparent to autodiff);
-* :func:`supports_epilogue` is the fused-op registry query (activations
-  AND the dedicated "rms_norm"/"attention_scores" kernels);
-  :func:`supports_activation_epilogue` is the strictly narrower question a
-  Dense/Activation leaf asks -- can the dense kernel's Faa di Bruno
-  epilogue run this activation, or must it compose through the reference
-  jet algebra after the linear part.
+* :func:`epilogues` is the typed capability registry: one mapping from
+  fusable name to :class:`EpilogueKind`.  ``ACTIVATION`` entries are the
+  closed-form Taylor tables the dense kernel can run in its Faa di Bruno
+  epilogue; ``FUSED_OP`` entries ("rms_norm", "attention_scores",
+  "flash_attention") name dedicated whole-chain kernels reached via their
+  own dispatch functions and are NOT valid dense epilogues.  The
+  pre-redesign boolean pair ``supports_epilogue`` /
+  ``supports_activation_epilogue`` survives one PR as deprecated shims.
 """
 
 from __future__ import annotations
 
+import enum
 import functools
+import warnings
+from types import MappingProxyType
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .jet_attention import jet_attention_scores_pallas, jet_rms_norm_pallas
+from .jet_attention import (jet_attention_scores_pallas,
+                            jet_flash_attention_pallas, jet_rms_norm_pallas)
 from .jet_dense import jet_dense_pallas
 from .tanh_jet import KERNEL_ACTS as _KERNEL_ACTS
 from .tanh_jet import act_jet_pallas
@@ -40,29 +47,64 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-# The fused-op registry: names a module may ask about before routing a jet
-# through a Pallas fast path instead of the reference algebra.  The kernel-
-# table activations fuse into jet_dense's Faa di Bruno epilogue; the
-# normalization/attention entries have dedicated fused kernels
-# (kernels/jet_attention.py) reached via jet_rms_norm / jet_attention_scores.
-_EPILOGUES = frozenset(_KERNEL_ACTS) | {"rms_norm", "attention_scores"}
+class EpilogueKind(enum.Enum):
+    """What a fusable-name entry in :func:`epilogues` is capable of.
+
+    ``ACTIVATION``
+        a closed-form Taylor table the *dense kernel* can evaluate in its
+        Faa di Bruno epilogue (also valid standalone via ``act_jet``);
+    ``FUSED_OP``
+        a dedicated whole-chain kernel (rms_norm, the PR-5 materializing
+        attention scores, the tiled flash attention block) reached through
+        its own dispatch function -- never a dense epilogue.
+    """
+
+    ACTIVATION = "activation"
+    FUSED_OP = "fused_op"
+
+
+# The typed fused-op registry: every name a module may ask about before
+# routing a jet through a Pallas fast path instead of the reference algebra.
+_EPILOGUE_KINDS: dict = {
+    **{a: EpilogueKind.ACTIVATION for a in _KERNEL_ACTS},
+    "rms_norm": EpilogueKind.FUSED_OP,
+    "attention_scores": EpilogueKind.FUSED_OP,
+    "flash_attention": EpilogueKind.FUSED_OP,
+}
+
+
+def epilogues() -> Mapping[str, EpilogueKind]:
+    """The capability registry: fusable name -> :class:`EpilogueKind`,
+    read-only.  ``epilogues().get(name) is EpilogueKind.ACTIVATION`` is the
+    question a Dense/Activation leaf asks (can the dense kernel's Faa di
+    Bruno epilogue run this activation); ``name in epilogues()`` is the
+    broad does-a-fused-path-exist query."""
+    return MappingProxyType(_EPILOGUE_KINDS)
 
 
 def supports_epilogue(name: str) -> bool:
-    """True when ``name`` (an activation, or a fused jet op such as
-    ``"rms_norm"`` / ``"attention_scores"``) can run inside a Pallas kernel
-    body instead of composing through the reference jet algebra."""
-    return name in _EPILOGUES
+    """Deprecated: use ``name in ops.epilogues()``.
+
+    Kept as a shim for one PR (scheduled for removal in the next PR along
+    with ``supports_activation_epilogue``); the boolean pair collapsed into
+    the single typed registry :func:`epilogues`."""
+    warnings.warn("ops.supports_epilogue(name) is deprecated; use "
+                  "'name in ops.epilogues()'", DeprecationWarning,
+                  stacklevel=2)
+    return name in _EPILOGUE_KINDS
 
 
 def supports_activation_epilogue(activation: str) -> bool:
-    """True when the *dense kernel* can run ``activation`` in its Faa di
-    Bruno epilogue (closed-form Taylor table baked into the kernel body).
-    Strictly narrower than :func:`supports_epilogue`: the fused-op names
-    ("rms_norm", "attention_scores") are NOT dense epilogues, and a Dense/
-    Activation leaf asking the broad question would hand jet_dense a name
-    its table stack cannot evaluate."""
-    return activation in _KERNEL_ACTS
+    """Deprecated: use ``ops.epilogues().get(name) is
+    EpilogueKind.ACTIVATION``.
+
+    Kept as a shim for one PR (scheduled for removal in the next PR along
+    with ``supports_epilogue``)."""
+    warnings.warn("ops.supports_activation_epilogue(name) is deprecated; "
+                  "use 'ops.epilogues().get(name) is "
+                  "EpilogueKind.ACTIVATION'", DeprecationWarning,
+                  stacklevel=2)
+    return _EPILOGUE_KINDS.get(activation) is EpilogueKind.ACTIVATION
 
 
 def _fold_batch(coeffs: jnp.ndarray, keep: int = 1) -> tuple[jnp.ndarray, tuple]:
@@ -195,6 +237,68 @@ def jet_attention_scores(q_coeffs: jnp.ndarray, k_coeffs: jnp.ndarray,
     qf, batch = _fold_batch(q_coeffs, keep=2)
     kf, _ = _fold_batch(k_coeffs, keep=2)
     out = _attention_scores4(qf, kf, scale)
+    return out.reshape(out.shape[:1] + batch + out.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# tiled flash-jet attention: the whole block (scores + masked softmax +
+# value contraction + output projection) in ONE launch with an online-
+# softmax recurrence over KV blocks generalized to the coefficient axis --
+# the "flash_attention" registry entry.  Backward recomputes through the
+# straight-line reference (materializing, but only under differentiation).
+# ---------------------------------------------------------------------------
+
+def _flash_attention_impl(q, k, v, wo, scale, mask):
+    kind, window = mask
+    return jet_flash_attention_pallas(q, k, v, wo, scale, mask=kind,
+                                      window=window,
+                                      interpret=not _on_tpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _flash_attention5(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      wo: jnp.ndarray, scale: float,
+                      mask: tuple) -> jnp.ndarray:
+    return _flash_attention_impl(q, k, v, wo, scale, mask)
+
+
+def _flash_attention_fwd(q, k, v, wo, scale, mask):
+    return _flash_attention_impl(q, k, v, wo, scale, mask), (q, k, v, wo)
+
+
+def _flash_attention_bwd(scale, mask, res, g):
+    from repro.core.modules import attention_mask
+    q, k, v, wo = res
+    dense = attention_mask(mask, q.shape[-2])
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv, ww: ref.jet_flash_attention_ref(
+            qq, kk, vv, ww, scale, mask=dense), q, k, v, wo)
+    return vjp(g)
+
+
+_flash_attention5.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def jet_flash_attention(q_coeffs: jnp.ndarray, k_coeffs: jnp.ndarray,
+                        v_coeffs: jnp.ndarray, wo: jnp.ndarray, scale: float,
+                        mask=None) -> jnp.ndarray:
+    """Tiled flash-jet attention block: Q/K/V stacks (n+1, *batch, H, T, Dh)
+    plus the output projection ``wo`` -- (H*Dh, Dm) as stored by
+    ``SelfAttention`` (head-major rows), or already (H, Dh, Dm) -- to the
+    block output jet (n+1, *batch, T, Dm) in one launch, never
+    materializing the (Tq, Tk) score jet.  ``mask`` is anything
+    ``repro.core.modules.normalize_attention_mask`` accepts.  Extra leading
+    batch axes fold into the kernel's gridded batch dimension and unfold on
+    the way out."""
+    from repro.core.modules import normalize_attention_mask
+    mask = normalize_attention_mask(mask)
+    h, d = q_coeffs.shape[-3], q_coeffs.shape[-1]
+    if wo.ndim == 2:
+        wo = wo.reshape(h, d, wo.shape[-1])
+    qf, batch = _fold_batch(q_coeffs, keep=3)
+    kf, _ = _fold_batch(k_coeffs, keep=3)
+    vf, _ = _fold_batch(v_coeffs, keep=3)
+    out = _flash_attention5(qf, kf, vf, wo, scale, mask)
     return out.reshape(out.shape[:1] + batch + out.shape[-2:])
 
 

@@ -88,6 +88,44 @@ def jet_attention_scores_ref(q: jnp.ndarray, k: jnp.ndarray,
     return jnp.stack(p)
 
 
+def jet_flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            wo: jnp.ndarray, scale: float,
+                            mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full fused-attention oracle: Q/K/V stacks (n+1, B, H, T, Dh) and the
+    output projection ``wo`` (H, Dh, Dm) -> the attention-block output jet
+    (n+1, B, T, Dm).
+
+    Straight-line scores -> masked softmax -> value contraction -> output
+    projection, all as explicit Cauchy convolutions / power-series
+    recurrences (no core.jet, no shared kernel body, no online rescaling --
+    the O(T^2)-memory computation the tiled kernel must reproduce).
+
+    ``mask`` is a dense boolean (Tq, Tk) keep-matrix (True = attend); every
+    query row must keep at least one key.  Masking replaces ``s_0`` with a
+    large negative constant *before* the exp recurrence, so masked
+    positions' whole e-jets vanish (exp underflows to exactly 0 and every
+    higher coefficient carries an e-factor that is already 0) -- no
+    inf/NaN enters even under differentiation.
+    """
+    n1 = q.shape[0]
+    s = [scale * sum(jnp.einsum("bhqd,bhkd->bhqk", q[i], k[m - i])
+                     for i in range(m + 1)) for m in range(n1)]
+    if mask is not None:
+        s[0] = jnp.where(mask, s[0], jnp.asarray(-1e30, s[0].dtype))
+    shift = jnp.max(s[0], axis=-1, keepdims=True)
+    e = [jnp.exp(s[0] - shift)]
+    for m in range(1, n1):
+        e.append(sum(j * s[j] * e[m - j] for j in range(1, m + 1)) / m)
+    tot = [jnp.sum(em, axis=-1, keepdims=True) for em in e]
+    p = [e[0] / tot[0]]
+    for m in range(1, n1):
+        p.append((e[m] - sum(tot[j] * p[m - j] for j in range(1, m + 1)))
+                 / tot[0])
+    o = [sum(jnp.einsum("bhqk,bhkd->bhqd", p[i], v[m - i])
+             for i in range(m + 1)) for m in range(n1)]
+    return jnp.stack([jnp.einsum("bhqd,hdo->bqo", om, wo) for om in o])
+
+
 def jet_rms_norm_ref(coeffs: jnp.ndarray, gamma: jnp.ndarray,
                      eps: float = 1e-6) -> jnp.ndarray:
     """Fused rms_norm oracle: (n+1, B, W) stack + (W,) gain -> rms_norm jet.

@@ -21,9 +21,12 @@ from typing import Callable, Dict, Tuple
 class ExecutableKey:
     """Everything that changes the compiled program.
 
-    ``request`` is ``(order,)`` for a pure-derivative grid or the axes tuple
-    for a mixed partial; ``bucket`` is the padded batch size the executable
-    was specialized to.
+    ``engine_spec`` must be the CANONICAL spec string
+    (``str(repro.core.engines.EngineSpec.parse(...))``), so equivalent
+    spellings -- ``"ntp"`` vs ``"ntp/jnp"`` -- hit one cache entry instead
+    of compiling twice; ``request`` is ``(order,)`` for a pure-derivative
+    grid or the axes tuple for a mixed partial; ``bucket`` is the padded
+    batch size the executable was specialized to.
     """
 
     net_id: str

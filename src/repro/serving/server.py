@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engines import DerivativeEngine
+from repro.core.engines import DerivativeEngine, EngineSpec
 from repro.core.network import Network
 from repro.runtime.metrics import LatencyStats
 
@@ -121,6 +121,10 @@ class DerivativeServer:
         self.net = net
         self.params = params
         self.engine = DerivativeEngine.from_spec(engine)
+        # the CANONICAL spec string keys the executable cache: equivalent
+        # spellings ("ntp" vs "ntp/jnp", "jet" vs "jax-jet") must share one
+        # compiled entry, so the raw argument never flows into the key
+        self.engine_spec = str(EngineSpec.parse(self.engine))
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one bucket size")
@@ -324,7 +328,7 @@ class DerivativeServer:
             xp = pad_to(jnp.concatenate([it.x for it in batch], axis=0)
                         if len(batch) > 1 else batch[0].x, bucket,
                         copy=self._donate and len(batch) == 1)
-            key = ExecutableKey(self.net_id, self.engine.spec, group.kind,
+            key = ExecutableKey(self.net_id, self.engine_spec, group.kind,
                                 group.request, bucket, group.dtype)
             fn, hit = self.cache.get_or_build(
                 key, lambda: self._compile(group, bucket))

@@ -121,6 +121,37 @@ def test_from_spec_round_trips():
         NTPEngine("cuda")
 
 
+def test_engine_spec_parse_and_str_round_trip():
+    """EngineSpec is the typed form of the spec string: parse accepts every
+    user-facing spelling, str() renders the canonical short form, and the
+    round trip is stable."""
+    from repro.core import EngineSpec
+    assert EngineSpec.parse("ntp") == EngineSpec("ntp", "jnp")
+    assert EngineSpec.parse("ntp/jnp") == EngineSpec.parse("ntp")
+    assert EngineSpec.parse("NTP/Pallas") == EngineSpec("ntp", "pallas")
+    assert EngineSpec.parse("jax-jet") == EngineSpec("jet")
+    assert str(EngineSpec.parse("ntp/jnp")) == "ntp"       # default impl short
+    assert str(EngineSpec.parse("ntp/pallas")) == "ntp/pallas"
+    assert str(EngineSpec.parse("autodiff")) == "autodiff"
+    for spec in ("ntp", "ntp/pallas", "autodiff", "jet"):
+        assert str(EngineSpec.parse(str(EngineSpec.parse(spec)))) == spec
+    # parse also normalizes engine instances and passes specs through
+    assert EngineSpec.parse(NTPEngine("pallas")) == EngineSpec("ntp", "pallas")
+    assert EngineSpec.parse(EngineSpec("jet")) == EngineSpec("jet")
+    for bad in ("hessian", "autodiff/pallas", "ntp/cuda", "jet/jnp", ""):
+        with pytest.raises(ValueError, match="engine spec"):
+            EngineSpec.parse(bad)
+
+
+def test_engine_spec_build_matches_from_spec():
+    from repro.core import EngineSpec
+    eng = EngineSpec.parse("ntp/pallas").build()
+    assert isinstance(eng, NTPEngine) and eng.impl == "pallas"
+    assert isinstance(EngineSpec.parse("jaxjet").build(), JaxJetEngine)
+    # aliases flow through from_spec too
+    assert isinstance(DerivativeEngine.from_spec("jax-jet"), JaxJetEngine)
+
+
 def test_legacy_shim_is_gone():
     """ROADMAP scheduled the PR-2 deprecation shim for removal: the
     engine=/impl= keyword pair and the bare-MLPParams reconstruction no
@@ -416,19 +447,36 @@ def test_transformer_matches_autodiff_oracle_to_order_4(
 
 def test_transformer_pallas_fused_matches_oracles_to_order_4(
         transformer_order4_oracles):
-    """Acceptance: with the FUSED attention-score and rms_norm kernels
-    active (ntp/pallas routes SelfAttention through
-    kernels.ops.jet_attention_scores and RMSNorm through jet_rms_norm),
+    """Acceptance: with the FUSED flash-attention and rms_norm kernels
+    active (ntp/pallas routes SelfAttention through the single-launch
+    kernels.ops.jet_flash_attention and RMSNorm through jet_rms_norm),
     the trunk still matches the nested-autodiff AND jax.experimental.jet
     oracles through order 4 within 1e-4."""
     from repro.kernels import ops as kops
-    assert kops.supports_epilogue("attention_scores")
-    assert kops.supports_epilogue("rms_norm")
+    assert kops.epilogues()["flash_attention"] is kops.EpilogueKind.FUSED_OP
+    assert kops.epilogues()["rms_norm"] is kops.EpilogueKind.FUSED_OP
     net, params, x, ad, jj = transformer_order4_oracles
     got = NTPEngine("pallas").derivs(net, params, x, 4)
     assert got.shape == (5, 4, 1)
     np.testing.assert_allclose(got, ad, rtol=1e-6, atol=1e-4)
     np.testing.assert_allclose(got, jj, rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("mask", (None, "causal", ("local", 2)),
+                         ids=("none", "causal", "local2"))
+def test_masked_transformer_flash_matches_jax_jet_to_order_4(mask):
+    """Acceptance: every mask variant of the flash-jet attention trunk
+    matches the independent jax.experimental.jet oracle to <= 1e-5 through
+    order 4, under both impls (the oracle traces the PRIMAL apply, so the
+    masked-softmax jet recurrences are checked against plain masking)."""
+    net = Transformer(2, 8, 2, 1, n_heads=2, mask=mask)
+    params = net.init(jax.random.PRNGKey(21), dtype=jnp.float64)
+    x = _pts(4, seed=22)
+    jj = JaxJetEngine().derivs(net, params, x, 4)
+    for impl in ("jnp", "pallas"):
+        got = NTPEngine(impl).derivs(net, params, x, 4)
+        assert got.shape == (5, 4, 1)
+        np.testing.assert_allclose(got, jj, rtol=1e-6, atol=1e-5)
 
 
 def test_transformer_vector_output_and_cross():

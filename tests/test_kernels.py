@@ -11,6 +11,7 @@ from repro.core import jet as J
 from repro.kernels import ops, ref
 from repro.kernels.bell_tables import fdb_terms, tanh_poly_rows
 from repro.kernels.jet_attention import (jet_attention_scores_pallas,
+                                         jet_flash_attention_pallas,
                                          jet_rms_norm_pallas)
 from repro.kernels.jet_dense import jet_dense_pallas
 from repro.kernels.tanh_jet import act_jet_pallas
@@ -203,19 +204,112 @@ def test_fused_kernels_grads_flow_through_reference_recompute():
         np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8)
 
 
-def test_supports_epilogue_registry():
-    """The fused-op registry names both the dense-kernel activations and the
-    dedicated attention/norm kernels; unknown names stay unfused; the
-    narrow activation query excludes the fused-op names (a Dense leaf must
-    never hand jet_dense a name its Taylor tables cannot evaluate)."""
-    for name in ("tanh", "sigmoid", "sin", "rms_norm", "attention_scores"):
-        assert ops.supports_epilogue(name)
-    for name in ("softplus", "layer_norm", "flash_attention"):
-        assert not ops.supports_epilogue(name)
+# ---------------------------------------------------------------------------
+# single-launch flash-jet attention (kernels/jet_attention.py, PR-7)
+# ---------------------------------------------------------------------------
+
+def _flash_case(order, bsz, heads, t, dh, dm, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kw = jax.random.split(key, 4)
+    shape = (order + 1, bsz, heads, t, dh)
+    q = jax.random.normal(kq, shape, jnp.float32) * 0.6
+    k = jax.random.normal(kk, shape, jnp.float32) * 0.6
+    v = jax.random.normal(kv, shape, jnp.float32) * 0.6
+    wo = jax.random.normal(kw, (heads, dh, dm), jnp.float32) * 0.3
+    return q, k, v, wo, 1.0 / math.sqrt(dh)
+
+
+def _dense_keep(mask, window, t):
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    if mask == "causal":
+        return j <= i
+    if mask == "local":
+        return (j <= i) & (i - j < window)
+    return None
+
+
+@pytest.mark.parametrize("order", [1, 4])
+@pytest.mark.parametrize("mask,window", [("none", 0), ("causal", 0),
+                                         ("local", 3)])
+@pytest.mark.parametrize("dims", [(2, 2, 7, 4, 6), (3, 1, 33, 8, 5)])
+def test_jet_flash_attention_sweep(order, mask, window, dims):
+    """Tiled online-softmax launch vs the straight-line ref, across every
+    mask variant and shapes that do NOT divide the (block_q, block_k,
+    block_b) tiling -- the masked tail blocks and the running-max rescale
+    both get exercised."""
+    b, h, t, dh, dm = dims
+    q, k, v, wo, scale = _flash_case(order, b, h, t, dh, dm, seed=order)
+    got = jet_flash_attention_pallas(q, k, v, wo, scale, mask=mask,
+                                     window=window, block_q=8, block_k=8,
+                                     block_b=2, interpret=True)
+    want = ref.jet_flash_attention_ref(q, k, v, wo, scale,
+                                       mask=_dense_keep(mask, window, t))
+    np.testing.assert_allclose(got, want, rtol=5e-4,
+                               atol=10 ** -(6 - order // 3))
+
+
+def test_flash_attention_ref_matches_core_jet_algebra():
+    """ref.jet_flash_attention_ref is itself validated against the
+    independent core jet algebra: scores -> J.softmax(mask=...) -> Cauchy
+    value contraction -> output projection."""
+    q, k, v, wo, scale = _flash_case(3, 2, 2, 6, 4, 5, seed=7)
+    q, k, v, wo = (x.astype(jnp.float64) for x in (q, k, v, wo))
+    keep = _dense_keep("local", 2, 6)
+    s = J.scale(J.einsum("...qd,...kd->...qk", J.Jet(q), J.Jet(k)), scale)
+    p = J.softmax(s, axis=-1, mask=keep)
+    o = J.einsum("...qk,...kd->...qd", p, J.Jet(v))
+    want = jnp.einsum("nbhqd,hdo->nbqo", o.coeffs, wo)
+    got = ref.jet_flash_attention_ref(q, k, v, wo, scale, mask=keep)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_flash_attention_grads_flow_through_reference_recompute():
+    """custom_vjp backward of ops.jet_flash_attention recomputes through the
+    ref path and matches autodiff of the ref directly."""
+    q, k, v, wo, scale = _flash_case(2, 1, 2, 5, 4, 3, seed=11)
+    q, k, v, wo = (x.astype(jnp.float64) for x in (q, k, v, wo))
+
+    def loss(f):
+        return lambda a, b, c, w: jnp.sum(f(a, b, c, w) ** 2)
+
+    g_ker = jax.grad(loss(lambda a, b, c, w: ops.jet_flash_attention(
+        a, b, c, w, scale, mask="causal")), argnums=(0, 1, 2, 3))(q, k, v, wo)
+    keep = _dense_keep("causal", 0, 5)
+    g_ref = jax.grad(loss(lambda a, b, c, w: ref.jet_flash_attention_ref(
+        a, b, c, w, scale, mask=keep)), argnums=(0, 1, 2, 3))(q, k, v, wo)
+    for a, b in zip(g_ker, g_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8)
+
+
+def test_epilogue_registry_is_typed_and_complete():
+    """ops.epilogues() names both the dense-kernel activations (ACTIVATION:
+    evaluable by jet_dense's Taylor tables) and the dedicated fused kernels
+    (FUSED_OP: rms_norm / attention_scores / flash_attention); unknown names
+    are absent; the mapping is read-only."""
+    reg = ops.epilogues()
     for name in ("tanh", "sigmoid", "sin"):
-        assert ops.supports_activation_epilogue(name)
-    for name in ("rms_norm", "attention_scores", "softplus"):
-        assert not ops.supports_activation_epilogue(name)
+        assert reg[name] is ops.EpilogueKind.ACTIVATION
+    for name in ("rms_norm", "attention_scores", "flash_attention"):
+        assert reg[name] is ops.EpilogueKind.FUSED_OP
+    for name in ("softplus", "layer_norm"):
+        assert name not in reg
+    with pytest.raises(TypeError):
+        reg["softplus"] = ops.EpilogueKind.ACTIVATION
+
+
+def test_deprecated_epilogue_shims_warn_and_delegate():
+    """supports_epilogue / supports_activation_epilogue survive one PR as
+    DeprecationWarning shims over epilogues(); note the kind split: the
+    narrow activation query must keep excluding fused-op names."""
+    with pytest.warns(DeprecationWarning):
+        assert ops.supports_epilogue("rms_norm")
+    with pytest.warns(DeprecationWarning):
+        assert not ops.supports_epilogue("softplus")
+    with pytest.warns(DeprecationWarning):
+        assert ops.supports_activation_epilogue("tanh")
+    with pytest.warns(DeprecationWarning):
+        assert not ops.supports_activation_epilogue("rms_norm")
 
 
 def test_tables_are_static_and_exact():

@@ -167,8 +167,8 @@ def test_dense_pallas_epilogue_fallback():
     """An activation without a kernel table (softplus) still runs under
     impl='pallas': the kernel does the linear part, the jet algebra the
     activation.  Fused epilogues must be flagged correctly."""
-    assert kops.supports_epilogue("tanh")
-    assert not kops.supports_epilogue("softplus")
+    assert kops.epilogues().get("tanh") is kops.EpilogueKind.ACTIVATION
+    assert "softplus" not in kops.epilogues()
     x = jax.random.normal(jax.random.PRNGKey(17), (4, 3), jnp.float32)
     mod = Dense(3, 6, "softplus")
     params = mod.init(jax.random.PRNGKey(18), dtype=jnp.float32)

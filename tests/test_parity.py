@@ -26,12 +26,17 @@ from repro.core import jet as J
 from repro.core.modules import (Activation, CoordinateEmbedding, Dense,
                                 FourierFeatures, MLPBlock, RMSNorm, Residual,
                                 SelfAttention, Sequential, TokenPool,
-                                module_names)
+                                module_names, normalize_attention_mask)
 from repro.core.network import make_network, network_names
 
 ORDERS = (0, 1, 2, 3, 4)
 MAX_ORDER = max(ORDERS)
 TOL = dict(rtol=1e-5, atol=1e-5)
+
+# every attention-mask variant the API accepts, in user-facing spelling;
+# the coverage test below proves this tuple spans every canonical kind, so
+# a new mask variant cannot ship without joining the parity sweep
+MASK_VARIANTS = (None, "causal", ("local", 2))
 
 # one case per registered module: () -> (module, input shape).  Shapes keep
 # a leading batch axis; token-axis modules carry (batch, tokens, features)
@@ -74,6 +79,14 @@ def test_every_registered_network_has_a_parity_case():
     assert set(NETWORK_KWARGS) == set(network_names()), (
         "parity sweep out of sync with the network registry; add kwargs to "
         "NETWORK_KWARGS for every registered network")
+
+
+def test_every_mask_kind_has_a_parity_variant():
+    from repro.core.modules import ATTENTION_MASK_KINDS
+    swept = {normalize_attention_mask(m)[0] for m in MASK_VARIANTS}
+    assert swept == set(ATTENTION_MASK_KINDS), (
+        "masked-attention parity sweep out of sync with the mask kinds "
+        "normalize_attention_mask accepts; extend MASK_VARIANTS")
 
 
 # ---------------------------------------------------------------------------
@@ -147,21 +160,55 @@ def test_network_pallas_matches_jnp(name, order, network_cases):
 
 
 # ---------------------------------------------------------------------------
+# masked attention: every mask variant through the same jnp <-> pallas gate,
+# at the leaf and through the full transformer trunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("mask", MASK_VARIANTS,
+                         ids=[str(normalize_attention_mask(m))
+                              for m in MASK_VARIANTS])
+def test_masked_attention_pallas_matches_jnp(mask, order, module_cases):
+    _, params, coeffs = module_cases("self_attention")
+    mod = SelfAttention(6, n_heads=2, mask=mask)
+    jet = J.Jet(coeffs[:order + 1])
+    a = mod.jet_apply(params, jet, impl="jnp")
+    b = mod.jet_apply(params, jet, impl="pallas")
+    assert a.coeffs.shape == b.coeffs.shape
+    np.testing.assert_allclose(np.asarray(a.coeffs), np.asarray(b.coeffs),
+                               **TOL)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("mask", MASK_VARIANTS,
+                         ids=[str(normalize_attention_mask(m))
+                              for m in MASK_VARIANTS])
+def test_masked_transformer_pallas_matches_jnp(mask, order, network_cases):
+    _, params, coeffs = network_cases("transformer")
+    net = make_network("transformer", d_in=2, d_out=1, width=8, depth=2,
+                       n_heads=2, mask=mask)
+    jet = J.Jet(coeffs[:order + 1])
+    a = net.jet_apply(params, jet, impl="jnp")
+    b = net.jet_apply(params, jet, impl="pallas")
+    assert a.coeffs.shape == b.coeffs.shape
+    np.testing.assert_allclose(np.asarray(a.coeffs), np.asarray(b.coeffs),
+                               **TOL)
+
+
+# ---------------------------------------------------------------------------
 # dispatch guard: parity alone cannot distinguish "fused kernel ran" from
 # "silently fell back to the (identical-output) reference algebra", so the
 # fused ops are counted through the module path explicitly
 # ---------------------------------------------------------------------------
 
-def test_pallas_impl_actually_dispatches_fused_kernels(monkeypatch):
-    """impl='pallas' on the transformer trunk must INVOKE ops.jet_dense,
-    ops.jet_attention_scores, and ops.jet_rms_norm (not just match their
-    output); impl='jnp' must invoke none of them.  Guards the
-    SelfAttention/RMSNorm routing and the epilogue-registry names against
-    silent fallback regressions."""
-    from repro.core.engines import NTPEngine
+COUNTED_OPS = ("jet_dense", "jet_flash_attention", "jet_attention_scores",
+               "jet_rms_norm")
+
+
+def _count_kernel_calls(monkeypatch):
     from repro.kernels import ops as kops
 
-    calls = {"jet_dense": 0, "jet_attention_scores": 0, "jet_rms_norm": 0}
+    calls = {fn_name: 0 for fn_name in COUNTED_OPS}
     for fn_name in calls:
         real = getattr(kops, fn_name)
 
@@ -170,17 +217,33 @@ def test_pallas_impl_actually_dispatches_fused_kernels(monkeypatch):
             return _real(*args, **kwargs)
 
         monkeypatch.setattr(kops, fn_name, counted)
+    return calls
 
+
+@pytest.mark.parametrize("mask", MASK_VARIANTS,
+                         ids=[str(normalize_attention_mask(m))
+                              for m in MASK_VARIANTS])
+def test_pallas_impl_actually_dispatches_fused_kernels(monkeypatch, mask):
+    """impl='pallas' on the transformer trunk must INVOKE ops.jet_dense,
+    ops.jet_flash_attention, and ops.jet_rms_norm (not just match their
+    output) for EVERY mask variant; impl='jnp' must invoke none of them; and
+    the PR-5 materializing score kernel (ops.jet_attention_scores) must
+    never run -- attention goes through the tiled flash path, no silent
+    fallback."""
+    from repro.core.engines import NTPEngine
+
+    calls = _count_kernel_calls(monkeypatch)
     net = make_network("transformer", d_in=2, d_out=1, width=4, depth=1,
-                       n_heads=2)
+                       n_heads=2, mask=mask)
     params = net.init(jax.random.PRNGKey(0), dtype=jnp.float64)
     x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (3, 2), jnp.float64)
 
     NTPEngine("jnp").derivs(net, params, x, 2)
-    assert calls == {"jet_dense": 0, "jet_attention_scores": 0,
-                     "jet_rms_norm": 0}, "jnp impl must not touch the kernels"
+    assert calls == {fn_name: 0 for fn_name in COUNTED_OPS}, \
+        "jnp impl must not touch the kernels"
 
     NTPEngine("pallas").derivs(net, params, x, 2)
-    assert calls["jet_attention_scores"] == 1     # one fused launch per layer
+    assert calls["jet_flash_attention"] == 1      # ONE tiled launch per layer
+    assert calls["jet_attention_scores"] == 0     # materializing kernel: dead
     assert calls["jet_rms_norm"] == 3             # 2 pre-norms + final norm
-    assert calls["jet_dense"] > 0                 # projections + MLP + head
+    assert calls["jet_dense"] > 0                 # q/k/v projections + MLP

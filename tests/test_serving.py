@@ -88,6 +88,26 @@ def test_cache_hit_miss_counts():
                              "size": 1, "capacity": 4}
 
 
+def test_equivalent_engine_spellings_share_one_executable(net, params, x5):
+    """'ntp' and 'ntp/jnp' are the SAME engine: both servers canonicalize to
+    one spec string, so across a shared cache the second spelling reuses the
+    first spelling's compiled executable (a hit, not a second compile)."""
+    from repro.core import EngineSpec
+    assert str(EngineSpec.parse("ntp")) == str(EngineSpec.parse("ntp/jnp"))
+    with DerivativeServer(net, params, "ntp", buckets=(8,),
+                          flush_window_s=0.0) as a:
+        a.grid(x5, 2, timeout=120.0)
+        assert a.cache.stats()["misses"] == 1
+        with DerivativeServer(net, params, "ntp/jnp", buckets=(8,),
+                              flush_window_s=0.0) as b:
+            assert b.engine_spec == a.engine_spec == "ntp"
+            b.cache = a.cache          # shared cache: spellings must collide
+            b.grid(x5, 2, timeout=120.0)
+        stats = a.cache.stats()
+        assert stats == {"hits": 1, "misses": 1, "evictions": 0,
+                         "size": 1, "capacity": 32}
+
+
 def test_cache_lru_eviction_at_capacity():
     cache = ExecutableCache(capacity=2)
     cache.get_or_build(_key(1), lambda: "A")
