@@ -59,13 +59,17 @@ def expected_operator_rows() -> set:
     without benchmark coverage fails the gate."""
     from repro.pinn.operators import operator_names
 
-    from .operators_bench import (NETWORK_AXIS, NETWORK_AXIS_OP, SPECS,
-                                  TOKEN_AXIS, row_name, token_row_name)
+    from .operators_bench import (DEVICE_AXIS, NETWORK_AXIS, NETWORK_AXIS_OP,
+                                  SPECS, TOKEN_AXIS, row_name, token_row_name,
+                                  weak_row_name)
     rows = {("operators", row_name(op, spec))
             for op in operator_names() for spec in SPECS}
     rows |= {("operators", row_name(NETWORK_AXIS_OP, spec, net))
              for net in NETWORK_AXIS for spec in SPECS}
     rows |= {("operators", token_row_name(t)) for t in TOKEN_AXIS}
+    # the weak-scaling axis: dropping a device count from the sharded-jet
+    # sweep fails CI the way a dropped operator does
+    rows |= {("operators", weak_row_name(d)) for d in DEVICE_AXIS}
     return rows
 
 

@@ -28,6 +28,11 @@ jet_attention_scores`` and RMSNorm through ``jet_rms_norm`` -- and carry a
 from __future__ import annotations
 
 import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +64,18 @@ NETWORK_AXIS_OP = "heat"
 # every other axis
 TOKEN_AXIS = (16, 64, 256)
 TOKEN_AXIS_ORDER = 2
+
+# the weak-scaling axis: the sharded jet engine (repro.parallel.jet_shard)
+# timed at a FIXED per-device collocation batch while the host-device count
+# grows, so the points/sec column reads as a weak-scaling curve.  Each
+# device count needs its own interpreter (XLA_FLAGS must force the host
+# platform device count before jax initializes), so every row is one
+# subprocess -- which also keeps the benchmark process itself single-device
+# like every other suite.  Rows are coverage-gated via compare.py like the
+# operator and token axes.
+DEVICE_AXIS = (1, 2, 4, 8)
+WEAK_SCALE_OP = "heat"
+WEAK_SCALE_SPEC = "ntp"
 
 
 def spec_tag(spec: str) -> str:
@@ -125,14 +142,77 @@ def _time_token_case(tokens: int, width: int, trials: int) -> tuple:
     return t, f"tokens={tokens};order={TOKEN_AXIS_ORDER};flash={flash}"
 
 
+def weak_row_name(devices: int) -> str:
+    return (f"weakscale_D{devices}_{WEAK_SCALE_OP}_"
+            f"{spec_tag(WEAK_SCALE_SPEC)}")
+
+
+def _time_weak_case(devices: int, pts_per_device: int, width: int,
+                    depth: int, trials: int, timeout: int = 300) -> tuple:
+    """One weak-scaling point: a subprocess with ``devices`` forced host
+    devices times the sharded residual grid on ``devices * pts_per_device``
+    collocation points (constant work per device).  Returns
+    (median seconds/call, derived tag with the points/sec column)."""
+    n_pts = devices * pts_per_device
+    code = textwrap.dedent(f"""
+        import json, time
+        import jax, jax.numpy as jnp
+        from repro.core.engines import DerivativeEngine
+        from repro.core.network import make_network
+        from repro.data.collocation import sample_box
+        from repro.parallel.jet_shard import ShardedEngine, resolve_mesh
+        from repro.pinn.operators import get_operator
+
+        op = get_operator({WEAK_SCALE_OP!r})
+        net = make_network("dense", d_in=op.d_in, d_out=op.d_out,
+                           width={width}, depth={depth})
+        eng = DerivativeEngine.from_spec({WEAK_SCALE_SPEC!r})
+        mesh = resolve_mesh(data_parallel={devices})
+        if mesh is not None:
+            eng = ShardedEngine(eng, mesh)
+        params = net.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        x = sample_box(jax.random.PRNGKey(1), op.domain, {n_pts}, jnp.float32)
+        fn = jax.jit(lambda p, xs: eng.grid(net, p, xs, op.order))
+        for _ in range(2):
+            jax.block_until_ready(fn(params, x))
+        times = []
+        for _ in range({trials}):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(params, x))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        print(json.dumps({{"s_per_call": times[len(times) // 2]}}))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count"
+                        f"={devices}").strip()
+    src = os.path.normpath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"weak-scaling child (devices={devices}) failed:\n"
+                           f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
+    t = json.loads(out.stdout.strip().splitlines()[-1])["s_per_call"]
+    derived = (f"devices={devices};points={n_pts};"
+               f"points_per_s={n_pts / t:.1f}")
+    return t, derived
+
+
 def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
         operators=DEFAULT_OPS, include_pallas: bool = True,
-        network: str = "dense", network_axis=(), token_axis=TOKEN_AXIS):
+        network: str = "dense", network_axis=(), token_axis=TOKEN_AXIS,
+        device_axis=DEVICE_AXIS):
     """Main sweep: every operator x engine spec on ``network``.  When
     ``network_axis`` names extra architectures, each is additionally timed
     on :data:`NETWORK_AXIS_OP` under every spec (rows suffixed ``_net-*``).
     ``token_axis`` adds the flash-attention token-count scaling rows
-    (pallas-only, so it rides ``include_pallas`` like the pallas specs)."""
+    (pallas-only, so it rides ``include_pallas`` like the pallas specs).
+    ``device_axis`` adds the weak-scaling rows: the sharded jet engine at
+    ``n_pts`` collocation points *per device* for each host-device count
+    (one subprocess per count -- see :func:`_time_weak_case`)."""
     # NOTE: deliberately no jax_enable_x64 flip here -- it is process-global
     # and would change the precision (and timings) of every suite after this
     # one.  Timing is dtype-uniform with the other suites instead.
@@ -161,6 +241,11 @@ def run(n_pts: int = 256, width: int = 24, depth: int = 3, trials: int = 3,
         for tokens in token_axis:
             t, derived = _time_token_case(tokens, width=8, trials=trials)
             rows.append(csv_row(token_row_name(tokens), t, derived))
+
+    for devices in device_axis:
+        t, derived = _time_weak_case(devices, pts_per_device=n_pts,
+                                     width=width, depth=depth, trials=trials)
+        rows.append(csv_row(weak_row_name(devices), t, derived))
     return rows
 
 

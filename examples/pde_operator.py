@@ -7,6 +7,8 @@
         --network fourier --fourier-features 32
     PYTHONPATH=src python examples/pde_operator.py --op navier-stokes   # 4th-order psi_xxyy
     PYTHONPATH=src python examples/pde_operator.py --op gray-scott      # d_out=2 system
+    PYTHONPATH=src python examples/pde_operator.py --op heat --devices 4 \
+        --grad-compression int8                 # data-parallel over 4 devices
 
 Each operator carries a manufactured/exact solution: it supplies the
 boundary/initial data during training and the L2 accuracy oracle at the end.
@@ -15,17 +17,17 @@ boundary/initial data during training and the L2 accuracy oracle at the end.
 paper's baseline); watch the per-step wall clock diverge as the operator's
 derivative order grows (KdV needs u_xxx).  ``--network`` picks any
 registered architecture: dense (paper), mlp, residual, fourier.
+
+``--devices N`` shards collocation batches over an N-device "data" mesh
+(``repro.parallel.jet_shard``); on a CPU-only host it forces N host
+platform devices via XLA_FLAGS, which is why the heavy imports happen
+*after* argument parsing.  ``--grad-compression int8|topk:F`` routes the
+gradient all-reduce through the error-feedback compressors (off by
+default: plain psum is exact).
 """
 
 import argparse
-
-import jax
-
-jax.config.update("jax_enable_x64", True)
-
-from repro.core import network_names  # noqa: E402
-from repro.pinn import (OperatorRunConfig, get_operator,  # noqa: E402
-                        operator_names, train_operator)
+import os
 
 
 def parse_mask(text: str):
@@ -40,12 +42,12 @@ def parse_mask(text: str):
     raise SystemExit(f"bad --mask {text!r}: expected none | causal | local:W")
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--op", default="heat", choices=list(operator_names()))
+    ap.add_argument("--op", default="heat")
     ap.add_argument("--engine", default="ntp",
                     help="engine spec: ntp | ntp/pallas | autodiff")
-    ap.add_argument("--network", default="dense", choices=list(network_names()))
+    ap.add_argument("--network", default="dense")
     ap.add_argument("--fourier-features", type=int, default=16,
                     help="embedding size for --network fourier")
     ap.add_argument("--heads", type=int, default=2,
@@ -60,14 +62,52 @@ def main():
     ap.add_argument("--depth", type=int, default=3)
     ap.add_argument("--activation", default="tanh")
     ap.add_argument("--lr", type=float, default=2e-3)
-    args = ap.parse_args()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard collocation batches over this many devices "
+                         "(0 = single-device; forces host-platform devices "
+                         "on CPU)")
+    ap.add_argument("--grad-compression", default=None,
+                    help="gradient all-reduce compression with --devices: "
+                         "int8 | topk:F (default: exact fp psum)")
+    ap.add_argument("--points", type=int, default=1024,
+                    help="collocation points per step (must divide "
+                         "--devices)")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.devices > 1:
+        # must land before jax initializes its backend: on a CPU host this
+        # is how N "devices" come to exist at all
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import network_names
+    from repro.pinn import (OperatorRunConfig, get_operator, operator_names,
+                            train_operator)
+
+    if args.op not in operator_names():
+        raise SystemExit(f"unknown --op {args.op!r}; known: "
+                         f"{', '.join(operator_names())}")
+    if args.network not in network_names():
+        raise SystemExit(f"unknown --network {args.network!r}; known: "
+                         f"{', '.join(network_names())}")
 
     op = get_operator(args.op)
     print(f"operator {op.name}: {op.description}")
     print(f"  d_in={op.d_in}, d_out={op.d_out}, "
           f"max pure-derivative order={op.order}, "
           f"mixed partials={op.mixed or 'none'}, domain={op.domain}")
-    print(f"  engine={args.engine}, network={args.network}")
+    print(f"  engine={args.engine}, network={args.network}, "
+          f"devices={args.devices or 1}"
+          + (f", grad_compression={args.grad_compression}"
+             if args.grad_compression else ""))
 
     net_kwargs = {}
     if args.network == "fourier":
@@ -79,7 +119,10 @@ def main():
                             network=args.network, net_kwargs=net_kwargs,
                             adam_steps=args.steps, lbfgs_steps=args.lbfgs,
                             width=args.width, depth=args.depth,
-                            activation=args.activation, adam_lr=args.lr)
+                            activation=args.activation, adam_lr=args.lr,
+                            n_domain=args.points,
+                            data_parallel=args.devices,
+                            grad_compression=args.grad_compression)
     res = train_operator(cfg)
 
     print(f"\nloss {res.loss_history[0]:.3e} -> {res.loss_history[-1]:.3e} "

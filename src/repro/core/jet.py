@@ -403,8 +403,11 @@ def softmax(a: Jet, axis: int = -1, mask: jnp.ndarray | None = None) -> Jet:
     keep-matrix (True = attend, broadcastable against the coefficients).
     Masked positions are replaced by the constant jet ``MASK_NEG`` *before*
     the exp recurrence, so their probability jets vanish identically at
-    every order and no inf/NaN enters even under differentiation.  Every
-    row of the reduced axis must keep at least one position."""
+    every order and no inf/NaN enters even under differentiation.  A row
+    that keeps NO position degrades gracefully instead of producing NaN:
+    the whole row becomes the constant ``MASK_NEG`` jet, the shift cancels
+    it exactly, and the result is the uniform distribution with zero
+    higher-order coefficients (pinned by tests/test_jet.py)."""
     if mask is not None:
         a = where(mask, a, MASK_NEG)
     shift = jax.lax.stop_gradient(jnp.max(a.coeffs[0], axis=axis, keepdims=True))

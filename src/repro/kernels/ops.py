@@ -21,14 +21,14 @@ This is also the dispatch surface for the compositional module layer
   "flash_attention") name dedicated whole-chain kernels reached via their
   own dispatch functions and are NOT valid dense epilogues.  The
   pre-redesign boolean pair ``supports_epilogue`` /
-  ``supports_activation_epilogue`` survives one PR as deprecated shims.
+  ``supports_activation_epilogue`` is gone (it survived one PR as
+  deprecated shims after the registry landed).
 """
 
 from __future__ import annotations
 
 import enum
 import functools
-import warnings
 from types import MappingProxyType
 from typing import Mapping
 
@@ -80,31 +80,6 @@ def epilogues() -> Mapping[str, EpilogueKind]:
     Bruno epilogue run this activation); ``name in epilogues()`` is the
     broad does-a-fused-path-exist query."""
     return MappingProxyType(_EPILOGUE_KINDS)
-
-
-def supports_epilogue(name: str) -> bool:
-    """Deprecated: use ``name in ops.epilogues()``.
-
-    Kept as a shim for one PR (scheduled for removal in the next PR along
-    with ``supports_activation_epilogue``); the boolean pair collapsed into
-    the single typed registry :func:`epilogues`."""
-    warnings.warn("ops.supports_epilogue(name) is deprecated; use "
-                  "'name in ops.epilogues()'", DeprecationWarning,
-                  stacklevel=2)
-    return name in _EPILOGUE_KINDS
-
-
-def supports_activation_epilogue(activation: str) -> bool:
-    """Deprecated: use ``ops.epilogues().get(name) is
-    EpilogueKind.ACTIVATION``.
-
-    Kept as a shim for one PR (scheduled for removal in the next PR along
-    with ``supports_epilogue``)."""
-    warnings.warn("ops.supports_activation_epilogue(name) is deprecated; "
-                  "use 'ops.epilogues().get(name) is "
-                  "EpilogueKind.ACTIVATION'", DeprecationWarning,
-                  stacklevel=2)
-    return _EPILOGUE_KINDS.get(activation) is EpilogueKind.ACTIVATION
 
 
 def _fold_batch(coeffs: jnp.ndarray, keep: int = 1) -> tuple[jnp.ndarray, tuple]:

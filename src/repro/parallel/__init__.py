@@ -1,4 +1,6 @@
-"""Distribution utilities: gradient compression, elastic helpers."""
+"""Distribution utilities: sharded jet computation, gradient compression."""
 
 from .compression import (compressed_psum_tree, dequantize_int8, ef_compress,
-                          ef_init, quantize_int8)
+                          ef_init, quantize_int8, topk_mask, topk_psum_tree)
+from .jet_shard import (DATA_AXIS, ShardedEngine, ShardedTrainStep,
+                        build_sharded_train_step, pad_rows, resolve_mesh)

@@ -18,6 +18,7 @@ needs no cross-pod reduce).
 
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Any, Tuple
 
@@ -49,6 +50,47 @@ def ef_init(grads) -> Any:
     """Zero error-feedback buffers shaped like the gradient pytree."""
     return jax.tree_util.tree_map(
         lambda g: jnp.zeros(g.shape, jnp.bfloat16), grads)
+
+
+def topk_mask(g: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Boolean keep-mask of the ``ceil(k_frac * size)`` largest-|g| entries
+    (per tensor, at least one entry kept)."""
+    if not 0.0 < k_frac <= 1.0:
+        raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+    flat = jnp.abs(g.astype(jnp.float32)).reshape(-1)
+    k = max(1, math.ceil(flat.shape[0] * k_frac))
+    if k >= flat.shape[0]:
+        return jnp.ones(g.shape, bool)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g.astype(jnp.float32)) >= thresh).reshape(g.shape)
+
+
+def topk_psum_tree(grads, err_tree, axis_name: str = "pod",
+                   k_frac: float = 0.1):
+    """Magnitude top-k + error-feedback psum of a gradient pytree over
+    ``axis_name`` (inside shard_map).
+
+    Each device keeps only the ``k_frac`` largest-magnitude entries of its
+    error-corrected gradient (mask chosen locally, so devices keep
+    *different* coordinates); dropped mass is carried into the next step's
+    residual.  The reduce itself is a dense psum of the sparse-content
+    tensors -- on hardware with sparse collectives the payload is the k
+    survivors; here the point is the estimator semantics, which the EF
+    convergence test pins.  Returns (reduced grads, new error tree)."""
+
+    def one(g, err):
+        corrected = g.astype(jnp.float32) + err.astype(jnp.float32)
+        keep = topk_mask(corrected, k_frac)
+        kept = jnp.where(keep, corrected, 0.0)
+        new_err = (corrected - kept).astype(err.dtype)
+        total = jax.lax.psum(kept, axis_name)
+        return total.astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
 
 
 def compressed_psum_tree(grads, err_tree, axis_name: str = "pod"):

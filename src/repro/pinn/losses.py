@@ -46,8 +46,8 @@ class LossWeights:
 def pinn_loss(params, *, op: Union[Operator, str], pts: jnp.ndarray,
               bc_pts: jnp.ndarray, bc_vals: jnp.ndarray, net: Network,
               weights: LossWeights = LossWeights(),
-              engine: Union[str, DerivativeEngine] = "ntp"
-              ) -> Tuple[jnp.ndarray, Dict]:
+              engine: Union[str, DerivativeEngine] = "ntp",
+              mesh=None) -> Tuple[jnp.ndarray, Dict]:
     """Operator-generic PINN objective: w_r ||R[u]||^2 + w_bc ||u - u*||^2_bd.
 
     ``bc_vals`` is the exact solution on ``bc_pts`` -- (N,) for scalar
@@ -58,11 +58,17 @@ def pinn_loss(params, *, op: Union[Operator, str], pts: jnp.ndarray,
     equation and the boundary term supervises every output component.  Only
     ``engine``/``net`` change the derivative machinery and architecture; the
     loss surface is identical across engines (the paper's "exact method"
-    property).
+    property).  ``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis)
+    shards the residual's grid/cross calls over the mesh's data axis via
+    :class:`repro.parallel.jet_shard.ShardedEngine` -- same loss value (bit
+    identical for the ntp engines), collocation batch split across devices.
     """
     if isinstance(op, str):
         op = get_operator(op)
     eng = DerivativeEngine.from_spec(engine)
+    if mesh is not None:
+        from repro.parallel.jet_shard import ShardedEngine
+        eng = ShardedEngine(eng, mesh)
     r = op.residual(pts, build_table(net, params, eng, op, pts))
     l_res = jnp.mean(r ** 2)
     ub = net.apply(params, bc_pts)                       # (Nb, d_out)

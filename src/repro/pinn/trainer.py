@@ -22,6 +22,8 @@ from repro.core.ntp import MLPParams, init_mlp, num_params
 from repro.data.collocation import (boundary_grid, eval_grid, resample,
                                     sample_box, uniform_grid)
 from repro.optim import adam_init, adam_update, lbfgs
+from repro.parallel.jet_shard import (ShardedEngine, build_sharded_train_step,
+                                      resolve_mesh)
 
 from .burgers import lambda_window, profile_lambda, smoothness_order
 from .losses import LossWeights, bc_targets, burgers_pinn_loss, pinn_loss
@@ -186,6 +188,16 @@ class OperatorRunConfig:
     resample_every: int = 500
     log_every: int = 500
     eval_pts_per_axis: int = 48
+    # -- multi-device data parallelism (repro.parallel.jet_shard) ----------
+    # data_parallel=N shards collocation batches over an (N,)-device "data"
+    # mesh (0 = single-device, the default); mesh= passes an explicit mesh
+    # carrying a "data" axis instead (e.g. a (4, 2) host mesh).  n_domain
+    # must divide the data-axis size.  grad_compression routes the gradient
+    # all-reduce through repro.parallel.compression: None (exact fp psum,
+    # default), "int8", or "topk:<frac>" -- both with error feedback.
+    data_parallel: int = 0
+    mesh: Optional[object] = None   # jax.sharding.Mesh (kept untyped: configs
+    grad_compression: Optional[str] = None  # import before jax init)
 
 
 @dataclass
@@ -217,15 +229,39 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
     bc_pts = boundary_grid(op.domain, cfg.n_bc, dtype)
     bc_vals = exact_values(op, bc_pts, dtype)
 
-    def loss_fn(p, pts):
-        return pinn_loss(p, op=op, pts=pts, bc_pts=bc_pts, bc_vals=bc_vals,
-                         weights=cfg.weights, engine=engine, net=net)
+    def make_loss(eng):
+        def loss_fn(p, pts):
+            return pinn_loss(p, op=op, pts=pts, bc_pts=bc_pts,
+                             bc_vals=bc_vals, weights=cfg.weights,
+                             engine=eng, net=net)
+        return loss_fn
 
-    @jax.jit
-    def adam_step(p, state, pts):
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, pts)
-        p, state = adam_update(grads, state, p, cfg.adam_lr)
-        return p, state, loss
+    loss_fn = make_loss(engine)
+    mesh = resolve_mesh(cfg.mesh, cfg.data_parallel)
+    if mesh is None:
+        @jax.jit
+        def adam_step(p, state, pts):
+            (loss, aux), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(p, pts)
+            p, state = adam_update(grads, state, p, cfg.adam_lr)
+            return p, state, loss
+    else:
+        # one shard_map program per step: local loss+grad on each device's
+        # collocation shard, psum (optionally compressed) of the grads, and
+        # a replicated Adam update -- see repro.parallel.jet_shard
+        if cfg.n_domain % mesh.shape["data"]:
+            raise ValueError(
+                f"n_domain={cfg.n_domain} does not divide the "
+                f"{mesh.shape['data']}-way data axis of the mesh")
+        built = build_sharded_train_step(
+            loss_fn, mesh, adam_lr=cfg.adam_lr,
+            compression=cfg.grad_compression)
+        ef_err = built.init_err(params)
+
+        def adam_step(p, state, pts):
+            nonlocal ef_err
+            p, state, (loss, aux), ef_err = built.step(p, state, pts, ef_err)
+            return p, state, loss
 
     state = adam_init(params)
     pts = sample_box(k_pts, op.domain, cfg.n_domain, dtype)
@@ -246,7 +282,12 @@ def train_operator(cfg: OperatorRunConfig) -> OperatorResult:
     if cfg.lbfgs_steps > 0:
         grid_pts = sample_box(jax.random.PRNGKey(cfg.seed + 1), op.domain,
                               cfg.n_domain, dtype)
-        vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        # under a mesh the full-batch L-BFGS objective shards its grid/cross
+        # calls (grads flow through shard_map's transpose); compression is
+        # an Adam-phase knob only
+        lbfgs_loss = loss_fn if mesh is None \
+            else make_loss(ShardedEngine(engine, mesh))
+        vg = jax.jit(jax.value_and_grad(lbfgs_loss, has_aux=True))
 
         def vg_flat(p):
             (loss, aux), grads = vg(p, grid_pts)

@@ -26,7 +26,10 @@ class ExecutableKey:
     spellings -- ``"ntp"`` vs ``"ntp/jnp"`` -- hit one cache entry instead
     of compiling twice; ``request`` is ``(order,)`` for a pure-derivative
     grid or the axes tuple for a mixed partial; ``bucket`` is the padded
-    batch size the executable was specialized to.
+    batch size the executable was specialized to; ``mesh`` is the device
+    mesh the executable was sharded over as ``((axis, size), ...)`` pairs
+    (empty for the single-device program -- the same bucket compiled for a
+    different mesh shape is a different executable).
     """
 
     net_id: str
@@ -35,6 +38,7 @@ class ExecutableKey:
     request: Tuple[int, ...]
     bucket: int
     dtype: str
+    mesh: Tuple[Tuple[str, int], ...] = ()
 
 
 class ExecutableCache:

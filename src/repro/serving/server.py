@@ -109,6 +109,12 @@ class DerivativeServer:
     max_queue : queue-depth bound; submits beyond it raise
         :class:`ServerOverloadedError`.
     cache_capacity : LRU capacity of the compiled-executable cache.
+    mesh : optional ``jax.sharding.Mesh`` with a ``"data"`` axis; bucketed
+        launches then run sharded over it (parameters replicated, the
+        padded batch split across the data axis -- bit-identical tables for
+        the ntp engines).  Every bucket must divide the data-axis size.
+        The executable-cache key grows the mesh shape, so the same bucket
+        compiled for different meshes never collides.
     autostart : start the worker thread (tests drive :meth:`_drain_once`
         synchronously with ``autostart=False``).
     """
@@ -117,7 +123,7 @@ class DerivativeServer:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  flush_window_s: float = 0.002, max_queue: int = 256,
                  cache_capacity: int = 32, net_id: Optional[str] = None,
-                 autostart: bool = True):
+                 mesh=None, autostart: bool = True):
         self.net = net
         self.params = params
         self.engine = DerivativeEngine.from_spec(engine)
@@ -128,6 +134,22 @@ class DerivativeServer:
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one bucket size")
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.shape:
+                raise ValueError(f"serving mesh needs a 'data' axis, got "
+                                 f"axes {tuple(mesh.shape)}")
+            bad = [b for b in self.buckets if b % mesh.shape["data"]]
+            if bad:
+                raise ValueError(
+                    f"buckets {bad} do not divide the {mesh.shape['data']}"
+                    f"-way data axis; sharded launches need every padded "
+                    f"batch to split evenly")
+        # the mesh shape is part of every executable key (a sharded and a
+        # single-device program at the same bucket are different binaries)
+        self.mesh_key = tuple(
+            (str(a), int(s)) for a, s in mesh.shape.items()) \
+            if mesh is not None else ()
         self.flush_window_s = float(flush_window_s)
         self.max_queue = int(max_queue)
         self.net_id = net_id or (f"{type(net).__name__}"
@@ -329,7 +351,8 @@ class DerivativeServer:
                         if len(batch) > 1 else batch[0].x, bucket,
                         copy=self._donate and len(batch) == 1)
             key = ExecutableKey(self.net_id, self.engine_spec, group.kind,
-                                group.request, bucket, group.dtype)
+                                group.request, bucket, group.dtype,
+                                self.mesh_key)
             fn, hit = self.cache.get_or_build(
                 key, lambda: self._compile(group, bucket))
             out = fn(self.params, xp)
@@ -375,6 +398,19 @@ class DerivativeServer:
 
             def compute(p, x):
                 return engine.cross(net, p, x, axes)
+
+        if self.mesh is not None:
+            # the bucketed launch itself is the shard_map program: params
+            # replicated, the padded batch split over the data axis (bucket
+            # divisibility was validated at construction, and zero pad rows
+            # are batch-independent, so sharding never changes live bits)
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            batch_axis = 2 if group.kind == "grid" else 0
+            out_spec = P(*([None] * batch_axis + ["data"]))
+            compute = shard_map(compute, mesh=self.mesh,
+                                in_specs=(P(), P("data")),
+                                out_specs=out_spec, check_rep=False)
 
         donate = (1,) if self._donate else ()
         x_spec = jax.ShapeDtypeStruct((bucket, net.d_in),

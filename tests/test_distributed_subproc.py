@@ -1,6 +1,12 @@
-"""Multi-device integration tests, run in subprocesses with 8 host devices
-(the main test process must keep the default 1-device jax, so anything
-needing a mesh gets its own interpreter with XLA_FLAGS set first)."""
+"""Multi-device integration tests, run in subprocesses with forced host
+devices (the main test process must keep the default 1-device jax, so
+anything needing a mesh gets its own interpreter with XLA_FLAGS set first).
+
+The whole module is ``multidevice``-marked: deselected from tier-1 (each
+test spins its own interpreter, tier-1 shouldn't pay that repeatedly) and
+run as its own CI job.  ``run_py(code, devices=N)`` is the one helper every
+mesh-shape sweep parametrizes -- tests/test_jet_shard.py reuses it for the
+sharded-jet parity layer."""
 
 import os
 import subprocess
@@ -9,10 +15,17 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 480) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` forced host
+    devices; asserts a zero exit and returns the child's stdout.  On
+    failure the assertion surfaces BOTH streams -- a child that fails an
+    assert after printing diagnostics puts the story in stdout, not just
+    the traceback in stderr."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         f" --xla_force_host_platform_device_count={devices}").strip()
@@ -20,7 +33,10 @@ def run_py(code: str, devices: int = 8, timeout: int = 480) -> str:
     env["TF_CPP_MIN_LOG_LEVEL"] = "2"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=timeout, env=env)
-    assert out.returncode == 0, out.stderr[-4000:]
+    assert out.returncode == 0, (
+        f"child exited {out.returncode}\n"
+        f"--- stdout (last 4000) ---\n{out.stdout[-4000:]}\n"
+        f"--- stderr (last 4000) ---\n{out.stderr[-4000:]}")
     return out.stdout
 
 

@@ -152,6 +152,63 @@ def test_engine_spec_build_matches_from_spec():
     assert isinstance(DerivativeEngine.from_spec("jax-jet"), JaxJetEngine)
 
 
+# every canonical rendering an EngineSpec can produce; the fuzz test pins
+# that NO input string parses to anything outside this closed set
+_CANONICAL_SPECS = {"ntp", "ntp/pallas", "autodiff", "jet"}
+
+_FUZZ_NAMES = ("ntp", "autodiff", "jet", "jax-jet", "jaxjet", "JET",
+               "", "pallas", "ntp2", "n t p", "autodif", "hessian",
+               "ntp/jnp", "jet/")
+_FUZZ_IMPLS = ("", "jnp", "pallas", "JNP", "Pallas", "cuda", "tpu", "x",
+               "jnp/pallas")
+
+
+@int_grid(("seed", 0, 100_000), max_examples=20)
+def test_engine_spec_fuzz_roundtrip_or_typed_error(seed):
+    """Random spec-ish strings (valid names, aliases, junk, case noise,
+    stray whitespace, bogus or doubled impl suffixes) either parse to one
+    of the four canonical specs -- with a stable parse/str round trip and
+    a buildable engine whose own .spec re-parses to the same value -- or
+    raise a ValueError carrying the offending input.  Nothing else: no
+    silent fallbacks, no crashes of any other type."""
+    import random
+
+    from repro.core import EngineSpec
+    rng = random.Random(seed)
+    for _ in range(25):
+        s = rng.choice(_FUZZ_NAMES)
+        case = rng.choice((str.upper, str.lower, str.title, lambda t: t))
+        s = case(s)
+        if rng.random() < 0.6:
+            s = f"{s}/{rng.choice(_FUZZ_IMPLS)}"
+        if rng.random() < 0.3:
+            s = f"  {s} "
+        try:
+            spec = EngineSpec.parse(s)
+        except ValueError as e:
+            # the typed error names the offending input verbatim
+            assert "bad engine spec" in str(e) and repr(s) in str(e), (s, e)
+            continue
+        canonical = str(spec)
+        assert canonical in _CANONICAL_SPECS, (s, canonical)
+        assert EngineSpec.parse(canonical) == spec            # round trip
+        assert str(EngineSpec.parse(canonical)) == canonical  # idempotent
+        built = spec.build()
+        assert EngineSpec.parse(built.spec) == spec           # engine agrees
+
+
+def test_engine_spec_direct_constructor_validates():
+    from repro.core import EngineSpec
+    with pytest.raises(ValueError, match="unknown engine"):
+        EngineSpec("hessian")
+    with pytest.raises(ValueError, match="takes no /impl"):
+        EngineSpec("autodiff", "pallas")
+    with pytest.raises(ValueError, match="unknown impl"):
+        EngineSpec("ntp", "cuda")
+    # the default impl is filled in, making equality canonical
+    assert EngineSpec("ntp") == EngineSpec("ntp", "jnp")
+
+
 def test_legacy_shim_is_gone():
     """ROADMAP scheduled the PR-2 deprecation shim for removal: the
     engine=/impl= keyword pair and the bare-MLPParams reconstruction no

@@ -228,3 +228,53 @@ def test_tanh_double_angle_identity(order, seed):
     t = J.tanh(a)
     rhs = J.div(J.scale(t, 2.0), J.add(J.mul(t, t), 1.0))
     np.testing.assert_allclose(lhs.coeffs, rhs.coeffs, rtol=1e-8, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# masked softmax: fully-masked rows must degrade, never NaN
+# ---------------------------------------------------------------------------
+
+@int_grid(("order", 0, 4), ("seed", 0, 1000), max_examples=12)
+def test_softmax_fully_masked_rows_are_nan_free(order, seed):
+    """A mask row that keeps NOTHING becomes the constant MASK_NEG jet: the
+    shift cancels it exactly, so the row degrades to the uniform
+    distribution with zero coefficients at every order >= 1 -- finite
+    everywhere, including under differentiation -- while live rows stay
+    bit-identical to the mask-free softmax on their (unmasked) logits."""
+    key = jax.random.PRNGKey(seed)
+    coeffs = jax.random.normal(key, (order + 1, 2, 3, 4), jnp.float64) * 2.0
+    a = J.Jet(coeffs)
+    dead = ((0, 1), (1, 2))
+    mask = jnp.ones((2, 3, 4), bool)
+    for b, q in dead:
+        mask = mask.at[b, q].set(False)
+
+    out = J.softmax(a, axis=-1, mask=mask)
+    assert bool(jnp.isfinite(out.coeffs).all())
+    for b, q in dead:
+        np.testing.assert_array_equal(np.asarray(out.coeffs[0, b, q]), 0.25)
+        if order:
+            np.testing.assert_array_equal(
+                np.asarray(out.coeffs[1:, b, q]), 0.0)
+    # probabilities stay normalized on every row, dead ones included
+    np.testing.assert_allclose(np.asarray(out.coeffs[0].sum(-1)), 1.0,
+                               rtol=1e-12)
+    # rows the mask leaves fully live are untouched by the mask machinery
+    ref = J.softmax(a, axis=-1)
+    live = [(b, q) for b in range(2) for q in range(3) if (b, q) not in dead]
+    for b, q in live:
+        np.testing.assert_array_equal(np.asarray(out.coeffs[:, b, q]),
+                                      np.asarray(ref.coeffs[:, b, q]))
+    # differentiation THROUGH the masked softmax stays finite too (the
+    # MASK_NEG constant-jet substitution is grad-safe, unlike a true -inf)
+    g = jax.grad(lambda c: jnp.sum(
+        J.softmax(J.Jet(c), axis=-1, mask=mask).coeffs ** 2))(coeffs)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_softmax_all_true_mask_is_identity():
+    a = _random_jet(7, 3)
+    np.testing.assert_array_equal(
+        np.asarray(J.softmax(a, axis=-1,
+                             mask=jnp.ones(a.coeffs.shape[1:], bool)).coeffs),
+        np.asarray(J.softmax(a, axis=-1).coeffs))

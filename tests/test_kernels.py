@@ -298,18 +298,11 @@ def test_epilogue_registry_is_typed_and_complete():
         reg["softplus"] = ops.EpilogueKind.ACTIVATION
 
 
-def test_deprecated_epilogue_shims_warn_and_delegate():
-    """supports_epilogue / supports_activation_epilogue survive one PR as
-    DeprecationWarning shims over epilogues(); note the kind split: the
-    narrow activation query must keep excluding fused-op names."""
-    with pytest.warns(DeprecationWarning):
-        assert ops.supports_epilogue("rms_norm")
-    with pytest.warns(DeprecationWarning):
-        assert not ops.supports_epilogue("softplus")
-    with pytest.warns(DeprecationWarning):
-        assert ops.supports_activation_epilogue("tanh")
-    with pytest.warns(DeprecationWarning):
-        assert not ops.supports_activation_epilogue("rms_norm")
+def test_deprecated_epilogue_shims_are_gone():
+    """The PR-7 supports_epilogue / supports_activation_epilogue shims had
+    a one-PR lifetime; the typed registry is the only surface now."""
+    assert not hasattr(ops, "supports_epilogue")
+    assert not hasattr(ops, "supports_activation_epilogue")
 
 
 def test_tables_are_static_and_exact():

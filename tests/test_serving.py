@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _compat import int_grid
 
 from repro.ckpt import CheckpointManager
 from repro.core.engines import DerivativeEngine
@@ -68,6 +69,47 @@ def test_pad_to_zero_rows_and_identity(x5):
     assert forced is not x5                       # donating launch) needs to
     np.testing.assert_array_equal(np.asarray(forced), np.asarray(x5))
     assert pad_fraction(5, 8) == pytest.approx(3 / 8)
+
+
+# ---------------------------------------------------------------------------
+# bucketing properties (hypothesis when installed, dense sweep otherwise)
+# ---------------------------------------------------------------------------
+
+@int_grid(("n", 1, 512), ("seed", 0, 10_000))
+def test_pick_bucket_pad_to_roundtrip_property(n, seed):
+    """For every admissible n: the bucket is the SMALLEST admissible one,
+    pad_to round-trips the live rows bit-for-bit, the pad is zeros, and
+    pad_fraction reports exactly the wasted share of the launch."""
+    from repro.serving.bucketing import DEFAULT_BUCKETS
+    b = pick_bucket(n)
+    assert b in DEFAULT_BUCKETS and n <= b
+    assert all(n > c for c in DEFAULT_BUCKETS if c < b)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 3), jnp.float64)
+    padded = pad_to(x, b)
+    assert padded.shape == (b, 3) and padded.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(padded[:n]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(padded[n:]), 0.0)
+    assert pad_fraction(n, b) == (b - n) / b
+
+
+@int_grid(("n", 9, 512))
+def test_pad_fraction_below_half_above_smallest_bucket(n):
+    """The power-of-two ladder caps pad waste: any request larger than the
+    smallest bucket lands in a bucket less than 2x its size."""
+    from repro.serving.bucketing import DEFAULT_BUCKETS
+    assert n > min(DEFAULT_BUCKETS)
+    assert 0.0 <= pad_fraction(n, pick_bucket(n)) < 0.5
+
+
+@int_grid(("extra", 1, 4096))
+def test_pick_bucket_too_large_boundary_property(extra):
+    """The largest bucket is an exact fit; one row more (and anything
+    beyond) is the typed RequestTooLargeError, never a silent clamp."""
+    from repro.serving.bucketing import DEFAULT_BUCKETS
+    top = max(DEFAULT_BUCKETS)
+    assert pick_bucket(top) == top
+    with pytest.raises(RequestTooLargeError):
+        pick_bucket(top + extra)
 
 
 # ---------------------------------------------------------------------------
